@@ -1,0 +1,59 @@
+"""Co-design DSE over the dry-run artifacts (the paper's §III workflow).
+
+Loads the compiled-cell profiles (or synthetic stand-ins), runs the full
+Table-I sweep, prints radar rows (Fig. 3) and pairs each application with
+its best-fit architecture variant, plus a bottleneck-shift demonstration
+(Fig. 2): what happens to the congruence profile when you fix the dominant
+subsystem.
+
+Run:  PYTHONPATH=src:. python examples/dse_codesign.py
+(after ``python -m repro.launch.dryrun`` for real artifacts)
+"""
+
+import sys
+
+sys.path.insert(0, ".")  # for benchmarks.common when run from repo root
+
+from benchmarks import common  # noqa: E402
+from repro.core import TPU_V5E, evaluate, profile_congruence  # noqa: E402
+
+
+def main() -> None:
+    profiles, synth = common.profiles_or_synthetic()
+    if synth:
+        print("(no dry-run artifacts found; using synthetic profiles)")
+    suites = common.suites_of(profiles)
+
+    table = evaluate(profiles, suites=suites, clamp=True)
+
+    print("== Fig. 3: congruence radar (baseline variant) ==")
+    for app in table.apps:
+        rep = table.cell(app, "baseline").report
+        bars = {k: "#" * int(v * 20) for k, v in rep.radar_row().items()}
+        print(f"{app:45s} ICS {bars['ICS']:<20s} HRCS {bars['HRCS']:<20s} "
+              f"LBCS {bars['LBCS']:<20s}")
+
+    print("\n== Table I: best-fit architecture per application ==")
+    for app in table.apps:
+        cells = " ".join(f"{v}={table.cell(app, v).aggregate:.3f}"
+                         for v in table.variants)
+        print(f"{app:45s} {cells}  -> {table.best_fit(app)}")
+    for suite in suites:
+        print(f"[{suite}] mean best fit: {table.suite_best_fit(suite)}")
+    print(f"[all] overall best fit: {table.overall_best_fit()}")
+
+    print("\n== Fig. 2: bottleneck shift under co-design ==")
+    p = profiles[0]
+    rep = profile_congruence(p, TPU_V5E, clamp=True)
+    print(f"{p.name}: dominant={rep.dominant} scores={ {k: round(v,3) for k,v in rep.scores.items()} }")
+    # co-design response: idealize the dominant subsystem's hardware
+    from repro.core import SCORE_NAMES, Subsystem
+    inv = {v: k for k, v in SCORE_NAMES.items()}
+    fixed = TPU_V5E.with_scales(**{inv[rep.dominant].value: 0.25})
+    rep2 = profile_congruence(p, fixed, clamp=True)
+    print(f"  after 4x faster {inv[rep.dominant].value}: "
+          f"dominant={rep2.dominant} scores={ {k: round(v,3) for k,v in rep2.scores.items()} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Serve a small model with batched requests (continuous batching).
+
+Demonstrates the serving substrate: fixed decode slots, slot recycling,
+prefill-then-decode, greedy sampling -- the dataflow the decode_32k /
+long_500k dry-run shapes exercise at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch ID]
+"""
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.engine import BatchedEngine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-mamba-7b",
+                    help="SSM decodes O(1)/token -- nice on CPU")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    engine = BatchedEngine(params, cfg, slots=args.slots, max_len=64)
+
+    prompts = [[(7 * i + j) % cfg.vocab_size for j in range(4)]
+               for i in range(args.requests)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+
+    t0 = time.perf_counter()
+    steps = 0
+    while engine.active or engine.queue:
+        engine.step()
+        steps += 1
+        if steps > 10_000:
+            raise RuntimeError("engine did not drain")
+    dt = time.perf_counter() - t0
+
+    total_tokens = sum(len(r.generated) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens / dt:.1f} tok/s, {args.slots} slots)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt} -> {r.generated}")
+    assert all(len(r.generated) >= r.max_new_tokens for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end training driver: train a small LM for a few hundred steps on
+CPU with the full production stack -- synthetic data pipeline, AdamW with
+warmup-cosine, fault-tolerant trainer with async checkpointing + straggler
+monitoring, and a post-run congruence profile of the training step.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--arch ID]
+      [--params-100m]   (scale the model to ~100M params; slower)
+"""
+
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import TPU_V5E, profile_congruence, profile_from_compiled
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--params-100m", action="store_true",
+                    help="~100M-param model (CPU: expect ~1 s/step)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    if args.params_100m:
+        cfg = cfg.replace(n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+                          d_ff=2048, vocab_size=65024)
+    total, active = cfg.param_counts()
+    print(f"model: {cfg.name}  params={total/1e6:.1f}M")
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    tc = TrainerConfig(total_steps=args.steps, checkpoint_every=100,
+                       checkpoint_dir=args.ckpt_dir, log_every=25)
+    dc = DataConfig(seq_len=args.seq_len, global_batch=args.batch)
+    oc = adamw.OptimizerConfig(peak_lr=1e-3, warmup_steps=30,
+                               total_steps=args.steps)
+    trainer = Trainer(cfg, tc, dc, oc)
+    out = trainer.run()
+
+    losses = [m["loss"] for m in out["metrics"]]
+    print(f"\nloss: {losses[0]:.4f} -> {losses[-1]:.4f} over {out['steps']} "
+          f"steps ({out['restarts']} restarts, "
+          f"{out['straggler_events']} straggler events)")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+
+    # profile the compiled step (paper pipeline on the real artifact)
+    state = out["final_state"]
+    batch = {k: jnp.asarray(v) for k, v in trainer.data.batch(0).items()}
+    from repro.training.step import make_train_step
+    compiled = jax.jit(make_train_step(cfg, oc)).lower(state, batch).compile()
+    profile = profile_from_compiled(
+        "train_lm", compiled, num_devices=1,
+        model_flops=6 * active * batch["tokens"].size,
+        tokens=batch["tokens"].size)
+    rep = profile_congruence(profile, TPU_V5E)
+    print(f"congruence: ICS={rep.ics:.3f} HRCS={rep.hrcs:.3f} "
+          f"LBCS={rep.lbcs:.3f} -> dominant {rep.dominant}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Assigned input shapes (identical across the 10 LM-family architectures).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token with a KV cache
+of seq_len), not ``train_step``.  ``long_500k`` requires sub-quadratic
+sequence mixing: it runs for the SSM/hybrid archs and is skipped (with the
+reason recorded) for pure full-attention archs -- see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, Optional[str]]:
+    """Whether this (arch, shape) cell is runnable, else the skip reason."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "full-attention architecture: 500k dense-KV decode is "
+            "O(seq) per token with an unbounded window; assigned-shape rules "
+            "direct skipping pure full-attention archs"
+        )
+    return True, None
+
+
+def tokens_of(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Token count processed by one step (for MODEL_FLOPS)."""
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch  # decode: one new token per sequence

@@ -1,0 +1,40 @@
+"""Congruence profiling core -- the paper's contribution, adapted to TPU pods.
+
+Public API:
+  MachineModel / Subsystem / VARIANTS      -- hardware models + idealization
+  WorkloadProfile / profile_from_compiled  -- compile-once cost extraction
+  subsystem_times / step_time              -- lightweight timing analysis
+  congruence_score / profile_congruence    -- Eq. 1 + ICS/HRCS/LBCS reports
+  roofline.analyze                         -- three-term roofline reports
+  dse.evaluate                             -- Table I-style variant sweeps
+"""
+
+from repro.core.congruence import (
+    CongruenceReport,
+    SCORE_NAMES,
+    congruence_score,
+    default_beta,
+    profile_congruence,
+)
+from repro.core.costs import (
+    COLLECTIVE_KINDS,
+    HloStats,
+    WorkloadProfile,
+    parse_hlo_stats,
+    profile_from_compiled,
+)
+from repro.core.dse import DseCell, DseTable, evaluate
+from repro.core.machine import (
+    ALL_SUBSYSTEMS,
+    IDEAL_EPS,
+    MachineModel,
+    Subsystem,
+    TPU_DENSER,
+    TPU_DENSEST,
+    TPU_V5E,
+    VARIANTS,
+    VARIANTS_BY_NAME,
+    get_variant,
+)
+from repro.core.roofline import RooflineReport, analyze, markdown_table, model_flops_for
+from repro.core.timing import TimingBreakdown, step_time, subsystem_times

@@ -1,0 +1,532 @@
+"""Workload cost extraction from compiled XLA artifacts.
+
+This is the analogue of VPR's post-route netlist: we run the expensive step
+(``jax.jit(step).lower(...).compile()``) exactly once per
+(architecture x shape x mesh) cell and extract a ``WorkloadProfile`` that all
+congruence scoring / DSE passes reuse without recompiling -- the paper's
+"reuse packing/placement/routing, re-run only timing analysis" discipline.
+
+Sources:
+  * ``compiled.cost_analysis()``      -> HLO FLOPs / bytes accessed (per device)
+  * ``compiled.memory_analysis()``    -> per-device memory footprint
+  * ``compiled.as_text()``            -> post-SPMD HLO; we parse per-kind
+                                         collective bytes (not in cost_analysis)
+                                         and MXU (dot/conv) FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s2": 1, "u2": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1, "f4e2m1fn": 1,
+    "token": 0, "opaque": 0,
+}
+
+# One HLO shape like  bf16[128,4096]{1,0:T(8,128)}  or  f32[] or pred[4]
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+# Instruction definition:  %name = <type(s)> opcode(...)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    width = _DTYPE_BYTES.get(dtype)
+    if width is None:
+        return 0
+    if not dims:
+        return width  # scalar
+    n = 1
+    for d in dims.split(","):
+        d = d.strip()
+        if d:
+            n *= int(d)
+    return n * width
+
+
+def _first_shapes_bytes(text: str) -> int:
+    """Total bytes across every shape literal found in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _split_result_and_rest(defn: str) -> Tuple[str, str]:
+    """Split '<type> opcode(operands), attrs' into (result_type_str, rest).
+
+    The result type is either a single shape or a tuple '(shape, shape, ...)'.
+    """
+    defn = defn.strip()
+    if defn.startswith("("):
+        depth = 0
+        for i, ch in enumerate(defn):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return defn[: i + 1], defn[i + 1:]
+        return defn, ""
+    m = _SHAPE_RE.match(defn)
+    if m:
+        return defn[: m.end()], defn[m.end():]
+    return "", defn
+
+
+def _extract_call_operands(rest: str) -> str:
+    """Return the text inside the opcode's parentheses."""
+    i = rest.find("(")
+    if i < 0:
+        return ""
+    depth = 0
+    for j in range(i, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[i + 1: j]
+    return rest[i + 1:]
+
+
+@dataclasses.dataclass
+class HloStats:
+    """Costs parsed out of post-partitioning HLO text."""
+
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+    collective_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVE_KINDS}
+    )
+    pod_collective_bytes: float = 0.0  # traffic whose replica groups cross pods
+    dot_flops: float = 0.0
+    dot_count: int = 0
+    hbm_bytes: float = 0.0  # TPU-fusion-aware HBM traffic estimate
+    op_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+# TPU HBM-traffic model over the CPU-compiled artifact (DESIGN.md §2):
+# XLA:CPU leaves convert/broadcast/copy/transpose and elementwise chains
+# unfused, so raw "bytes accessed" wildly overstates what the TPU backend
+# (which fuses those into neighbours) would stream from HBM.  We count only
+# kernel-boundary ops:
+#   dot/convolution/fusion  -> operands + result (one kernel: read ins, write out)
+#   collectives             -> operand bytes (already in the ICI term, but they
+#                              also pass HBM once)
+#   dynamic-(update-)slice, gather, scatter -> result (KV-cache style traffic)
+#   reduce                  -> operands (reads the big tensor)
+#   parameter               -> result (each input buffer read once)
+# Everything else (elementwise, convert, broadcast, copy, transpose, bitcast,
+# reshape, iota, constant, tuple plumbing) is assumed fused: 0 HBM bytes.
+_HBM_OPERAND_OPS = ("dot", "convolution", "fusion")
+_HBM_RESULT_OPS = ("dot", "convolution", "fusion", "parameter",
+                   "dynamic-update-slice", "dynamic-slice", "gather",
+                   "scatter", "all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute", "sort")
+_HBM_REDUCE_OPS = ("reduce", "reduce-window")
+
+
+# replica_groups comes in two prints:
+#   explicit:  replica_groups={{0,1},{2,3}}
+#   iota:      replica_groups=[4,2]<=[2,4]T(1,0)   (reshape+transpose+regroup)
+_RG_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[0-9,{} ]*\})\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+_STP_RE = re.compile(r"source_target_pairs=\{([0-9,{} ]*)\}")
+
+
+def _parse_replica_groups(line: str) -> Optional[List[List[int]]]:
+    """Return the device groups of a collective instruction, or None."""
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        reshape = [int(x) for x in m.group(2).split(",")]
+        n = 1
+        for r in reshape:
+            n *= r
+        devices = list(range(n))
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            # reshape to `reshape`, transpose by perm, flatten
+            import itertools
+
+            strides = [0] * len(reshape)
+            acc = 1
+            for i in range(len(reshape) - 1, -1, -1):
+                strides[i] = acc
+                acc *= reshape[i]
+            out = []
+            tdims = [reshape[p] for p in perm]
+            for idx in itertools.product(*[range(d) for d in tdims]):
+                flat = sum(idx[j] * strides[perm[j]] for j in range(len(perm)))
+                out.append(flat)
+            devices = out
+        group_size = dims[-1] if len(dims) > 1 else dims[0]
+        num_groups = n // group_size
+        return [
+            devices[g * group_size: (g + 1) * group_size] for g in range(num_groups)
+        ]
+    m = _RG_EXPLICIT_RE.search(line)
+    if m:
+        groups = []
+        for grp in re.findall(r"\{([0-9, ]*)\}", m.group(1)):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids:
+                groups.append(ids)
+        return groups or None
+    m = _STP_RE.search(line)
+    if m:  # collective-permute: treat each pair as a group
+        groups = []
+        for grp in re.findall(r"\{([0-9, ]*)\}", "{" + m.group(1) + "}"):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if len(ids) == 2:
+                groups.append(ids)
+        return groups or None
+    return None
+
+
+def _crosses_pod(groups: Optional[List[List[int]]], devices_per_pod: int) -> bool:
+    if not groups or devices_per_pod <= 0:
+        return False
+    for g in groups:
+        pods = {d // devices_per_pod for d in g}
+        if len(pods) > 1:
+            return True
+    return False
+
+
+def parse_hlo_stats(hlo_text: str, *, devices_per_pod: int = 0) -> HloStats:
+    """Parse optimized HLO text for collective traffic and MXU dot FLOPs.
+
+    Per the roofline spec, collective bytes are the summed operand sizes of
+    every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute instruction.  Operands in HLO full text may carry
+    inline types (``all-reduce(f32[512] %add.5)``); when they do not we
+    resolve them through a symbol table of instruction result shapes, then
+    fall back to the collective's own result shape.
+
+    ``devices_per_pod`` > 0 additionally attributes bytes whose replica
+    groups span pod boundaries to ``pod_collective_bytes`` (charged at the
+    slower inter-pod rate by the timing model).
+    """
+    stats = HloStats()
+    symbol_types: Dict[str, str] = {}
+    fusion_bodies: set = set()
+
+    comp_header = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+    # Pass 1: symbol table + computations called by fusion instructions.
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, defn = m.group(1), m.group(2)
+        result_type, rest = _split_result_and_rest(defn)
+        if result_type:
+            symbol_types[name] = result_type
+        if re.match(r"\s*fusion\(", rest):
+            cm = re.search(r"calls=%?([\w.\-]+)", rest)
+            if cm:
+                fusion_bodies.add(cm.group(1))
+
+    # Pass 2: collectives, dots and HBM traffic, with computation scoping:
+    # ops inside fusion bodies are already accounted at the fusion call site;
+    # `parameter` counts only in ENTRY (nested computations re-declare params).
+    in_entry = False
+    in_fusion_body = False
+    for line in hlo_text.splitlines():
+        hm = comp_header.match(line)
+        if hm and "=" not in line.split("(")[0]:
+            in_entry = bool(hm.group(1))
+            name = hm.group(2)
+            in_fusion_body = (name in fusion_bodies
+                              or name.startswith("fused_"))
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        if in_fusion_body:
+            continue
+        defn = m.group(2)
+        result_type, rest = _split_result_and_rest(defn)
+        rest_stripped = rest.strip()
+        opcode_match = re.match(r"([\w\-]+)", rest_stripped)
+        if not opcode_match:
+            continue
+        opcode = opcode_match.group(1)
+        if opcode == "parameter" and not in_entry:
+            continue
+        stats.op_counts[opcode] = stats.op_counts.get(opcode, 0) + 1
+
+        # ----- collectives --------------------------------------------- #
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            # all-gather-start / all-reduce-done etc. count once at -start;
+            # plain forms count directly.
+            if opcode == k or opcode == k + "-start":
+                kind = k
+                break
+        if kind is not None:
+            operands = _extract_call_operands(rest_stripped)
+            nbytes = _first_shapes_bytes(operands)
+            if nbytes == 0:
+                # Operands printed without inline types: resolve via symbols.
+                for ref in re.findall(r"%([\w.\-]+)", operands):
+                    nbytes += _first_shapes_bytes(symbol_types.get(ref, ""))
+            if nbytes == 0:
+                nbytes = _first_shapes_bytes(result_type)
+            stats.collective_bytes[kind] += float(nbytes)
+            stats.collective_counts[kind] += 1
+            stats.hbm_bytes += float(nbytes)  # collective payload passes HBM
+            if devices_per_pod and _crosses_pod(
+                _parse_replica_groups(rest_stripped), devices_per_pod
+            ):
+                stats.pod_collective_bytes += float(nbytes)
+            continue
+
+        # ----- MXU work (dot / convolution) ----------------------------- #
+        if opcode in ("dot", "convolution"):
+            flops = _dot_flops(result_type, rest_stripped, symbol_types)
+            stats.dot_flops += flops
+            stats.dot_count += 1
+
+        # ----- TPU HBM traffic model ------------------------------------ #
+        result_bytes = _first_shapes_bytes(result_type)
+        operand_bytes = 0
+        if opcode in _HBM_OPERAND_OPS or opcode in _HBM_REDUCE_OPS:
+            operands = _extract_call_operands(rest_stripped)
+            operand_bytes = _first_shapes_bytes(operands)
+            if operand_bytes == 0:
+                for ref in re.findall(r"%([\w.\-]+)", operands):
+                    operand_bytes += _first_shapes_bytes(symbol_types.get(ref, ""))
+        if opcode in _HBM_OPERAND_OPS:
+            stats.hbm_bytes += operand_bytes + result_bytes
+        elif opcode in _HBM_REDUCE_OPS:
+            stats.hbm_bytes += operand_bytes
+        elif opcode in _HBM_RESULT_OPS or (
+                opcode.endswith("-start") and opcode[:-6] in _HBM_RESULT_OPS):
+            stats.hbm_bytes += result_bytes
+
+    return stats
+
+
+def _dot_flops(result_type: str, rest: str, symbol_types: Dict[str, str]) -> float:
+    """FLOPs of one dot: 2 * result_elements * contraction_size."""
+    rm = _SHAPE_RE.match(result_type.strip())
+    if not rm:
+        return 0.0
+    result_elems = 1
+    if rm.group(2):
+        for d in rm.group(2).split(","):
+            if d.strip():
+                result_elems *= int(d)
+    operands = _extract_call_operands(rest)
+    lhs_m = _SHAPE_RE.search(operands)
+    if lhs_m is None:
+        # Operand printed as bare %ref: resolve the first operand's type.
+        refs = re.findall(r"%([\w.\-]+)", operands)
+        if refs:
+            lhs_m = _SHAPE_RE.search(symbol_types.get(refs[0], ""))
+    if lhs_m is None:
+        return 0.0
+    lhs_dims = [int(d) for d in lhs_m.group(2).split(",") if d.strip()] if lhs_m.group(2) else []
+    contract = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+    k = 1
+    if contract and contract.group(1):
+        for idx in contract.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    elif lhs_dims:
+        k = lhs_dims[-1]
+    return 2.0 * result_elems * k
+
+
+# --------------------------------------------------------------------------- #
+# WorkloadProfile
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class WorkloadProfile:
+    """Everything the timing/congruence/roofline passes need for one cell.
+
+    FLOPs/bytes are PER DEVICE (XLA compiles the per-device SPMD program, so
+    ``cost_analysis`` reports per-device work).  Roofline terms therefore
+    divide by per-chip rates; multiply by ``num_devices`` for global totals.
+    """
+
+    name: str
+    arch: str = ""
+    shape: str = ""
+    mesh: str = ""
+    step_kind: str = "train"      # train | prefill | decode
+    num_devices: int = 1
+    flops: float = 0.0            # per-device HLO FLOPs
+    bytes_accessed: float = 0.0   # per-device HLO bytes
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS}
+    )
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    pod_collective_bytes: float = 0.0   # share of traffic crossing the pod axis
+    dot_flops: float = 0.0
+    dot_count: int = 0
+    hbm_bytes: float = 0.0              # per-device TPU HBM-traffic estimate
+    peak_memory_bytes: float = 0.0      # per-device, from memory_analysis
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+    temp_bytes: float = 0.0
+    model_flops: float = 0.0            # analytic 6*N*D (train) / 2*N*D (infer), GLOBAL
+    tokens: int = 0
+    params: float = 0.0                 # total parameter count
+    params_active: float = 0.0          # active (MoE-aware) parameter count
+    compile_seconds: float = 0.0
+    meta: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    @property
+    def global_flops(self) -> float:
+        return self.flops * self.num_devices
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs -- catches remat/redundancy waste."""
+        if self.global_flops <= 0:
+            return math.nan
+        return self.model_flops / self.global_flops
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "WorkloadProfile":
+        known = {f.name for f in dataclasses.fields(WorkloadProfile)}
+        return WorkloadProfile(**{k: v for k, v in d.items() if k in known})
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+
+    @staticmethod
+    def load(path: str) -> "WorkloadProfile":
+        with open(path) as f:
+            return WorkloadProfile.from_json(json.load(f))
+
+
+def _parse_memory_analysis(mem) -> Dict[str, float]:
+    """memory_analysis() returns an object or str depending on backend.
+
+    The device footprint estimate is arguments + temps + (outputs - aliased):
+    donated inputs alias outputs, and XLA's own peak_memory_in_bytes on the
+    CPU backend omits temps, so we take the max of both views.
+    """
+    out = {"argument": 0.0, "output": 0.0, "temp": 0.0, "peak": 0.0,
+           "alias": 0.0}
+    if mem is None:
+        return out
+    for attr, key in (
+        ("argument_size_in_bytes", "argument"),
+        ("output_size_in_bytes", "output"),
+        ("temp_size_in_bytes", "temp"),
+        ("alias_size_in_bytes", "alias"),
+        ("peak_memory_in_bytes", "peak"),
+    ):
+        val = getattr(mem, attr, None)
+        if val is not None:
+            out[key] = float(val)
+    footprint = (out["argument"] + out["temp"]
+                 + max(0.0, out["output"] - out["alias"]))
+    out["peak"] = max(out["peak"], footprint)
+    return out
+
+
+def profile_from_compiled(
+    name: str,
+    compiled,
+    *,
+    arch: str = "",
+    shape: str = "",
+    mesh: str = "",
+    step_kind: str = "train",
+    num_devices: int = 1,
+    model_flops: float = 0.0,
+    tokens: int = 0,
+    params: float = 0.0,
+    params_active: float = 0.0,
+    compile_seconds: float = 0.0,
+    hlo_text: Optional[str] = None,
+    devices_per_pod: int = 0,
+    meta: Optional[dict] = None,
+) -> WorkloadProfile:
+    """Build a WorkloadProfile from a ``jax`` Compiled object."""
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else (cost_list or {})
+    if hlo_text is None:
+        hlo_text = compiled.as_text()
+    stats = parse_hlo_stats(hlo_text, devices_per_pod=devices_per_pod)
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:  # pragma: no cover - backend-dependent
+        pass
+    memd = _parse_memory_analysis(mem)
+
+    return WorkloadProfile(
+        name=name,
+        arch=arch,
+        shape=shape,
+        mesh=mesh,
+        step_kind=step_kind,
+        num_devices=num_devices,
+        flops=float(cost.get("flops", 0.0) or 0.0),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0) or 0.0),
+        transcendentals=float(cost.get("transcendentals", 0.0) or 0.0),
+        collective_bytes=dict(stats.collective_bytes),
+        collective_counts=dict(stats.collective_counts),
+        pod_collective_bytes=stats.pod_collective_bytes,
+        dot_flops=stats.dot_flops,
+        hbm_bytes=stats.hbm_bytes,
+        dot_count=stats.dot_count,
+        peak_memory_bytes=memd["peak"],
+        argument_bytes=memd["argument"],
+        output_bytes=memd["output"],
+        temp_bytes=memd["temp"],
+        model_flops=model_flops,
+        tokens=tokens,
+        params=params,
+        params_active=params_active,
+        compile_seconds=compile_seconds,
+        meta=dict(meta or {}),
+    )

@@ -1,0 +1,158 @@
+"""Design-space exploration over machine variants (paper §III, Table I).
+
+Given a set of workload profiles (applications) and machine variants
+(baseline / denser / densest), compute the aggregate congruence score for
+every (application, variant) pair, pick each application's best-fit variant
+(lowest aggregate = smallest radar area = best alignment), and report suite
+means -- reproducing the structure of the paper's Table I and Fig. 3 on our
+TPU workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+
+from repro.core.congruence import CongruenceReport, profile_congruence
+from repro.core.costs import WorkloadProfile
+from repro.core.machine import MachineModel, VARIANTS
+
+
+@dataclasses.dataclass
+class DseCell:
+    app: str
+    variant: str
+    report: CongruenceReport
+
+    @property
+    def aggregate(self) -> float:
+        return self.report.aggregate
+
+
+@dataclasses.dataclass
+class DseTable:
+    """Table I analogue: rows = applications, columns = machine variants."""
+
+    cells: List[DseCell]
+    suites: Mapping[str, Sequence[str]]  # suite name -> list of app names
+
+    def cell(self, app: str, variant: str) -> DseCell:
+        for c in self.cells:
+            if c.app == app and c.variant == variant:
+                return c
+        raise KeyError((app, variant))
+
+    @property
+    def apps(self) -> List[str]:
+        seen: Dict[str, None] = {}
+        for c in self.cells:
+            seen.setdefault(c.app, None)
+        return list(seen)
+
+    @property
+    def variants(self) -> List[str]:
+        seen: Dict[str, None] = {}
+        for c in self.cells:
+            seen.setdefault(c.variant, None)
+        return list(seen)
+
+    def best_fit(self, app: str) -> str:
+        """Lowest aggregate congruence = best-fit architecture (paper §III-C)."""
+        best, best_score = None, float("inf")
+        for c in self.cells:
+            if c.app == app and c.aggregate < best_score:
+                best, best_score = c.variant, c.aggregate
+        assert best is not None
+        return best
+
+    def suite_mean(self, suite: str, variant: str) -> float:
+        apps = set(self.suites[suite])
+        vals = [c.aggregate for c in self.cells if c.variant == variant and c.app in apps]
+        return sum(vals) / len(vals) if vals else float("nan")
+
+    def suite_best_fit(self, suite: str) -> str:
+        return min(self.variants, key=lambda v: self.suite_mean(suite, v))
+
+    def aggregate_mean(self, variant: str) -> float:
+        vals = [c.aggregate for c in self.cells if c.variant == variant]
+        return sum(vals) / len(vals) if vals else float("nan")
+
+    def overall_best_fit(self) -> str:
+        return min(self.variants, key=self.aggregate_mean)
+
+    # ------------------------------------------------------------------ #
+
+    def markdown(self) -> str:
+        variants = self.variants
+        lines = ["| application | " + " | ".join(variants) + " | best fit |",
+                 "|---" * (len(variants) + 2) + "|"]
+        for suite, suite_apps in self.suites.items():
+            lines.append(f"| **{suite}** |" + " |" * (len(variants) + 1))
+            for app in suite_apps:
+                row = [f"| {app} "]
+                for v in variants:
+                    try:
+                        row.append(f"| {self.cell(app, v).aggregate:.3f} ")
+                    except KeyError:
+                        row.append("| - ")
+                row.append(f"| {self.best_fit(app)} |")
+                lines.append("".join(row))
+            means = " ".join(f"| {self.suite_mean(suite, v):.3f}" for v in variants)
+            lines.append(
+                f"| *{suite} mean* {means} | {self.suite_best_fit(suite)} |"
+            )
+        means = " ".join(f"| {self.aggregate_mean(v):.3f}" for v in variants)
+        lines.append(f"| **aggregate** {means} | {self.overall_best_fit()} |")
+        return "\n".join(lines)
+
+    def radar_markdown(self) -> str:
+        """Fig. 3 analogue: per-app ICS/HRCS/LBCS triplets per variant."""
+        variants = self.variants
+        header = "| application |" + "".join(
+            f" {v} ICS | {v} HRCS | {v} LBCS |" for v in variants
+        )
+        lines = [header, "|---" * (1 + 3 * len(variants)) + "|"]
+        for app in self.apps:
+            row = [f"| {app} "]
+            for v in variants:
+                try:
+                    r = self.cell(app, v).report
+                    row.append(f"| {r.ics:.3f} | {r.hrcs:.3f} | {r.lbcs:.3f} ")
+                except KeyError:
+                    row.append("| - | - | - ")
+            lines.append("".join(row) + "|")
+        return "\n".join(lines)
+
+
+def evaluate(
+    profiles: Iterable[WorkloadProfile],
+    *,
+    variants: Sequence[MachineModel] = VARIANTS,
+    suites: Optional[Mapping[str, Sequence[str]]] = None,
+    timing_model: str = "serial",
+    beta: Optional[float] = None,
+    clamp: bool = True,
+) -> DseTable:
+    """Score every (application x variant) cell.
+
+    The expensive compile happened once per profile; this sweep is pure
+    arithmetic -- the paper's lightweight DSE loop.
+    """
+    profiles = list(profiles)
+    if suites is None:
+        suites = {"all": [p.name for p in profiles]}
+    cells: List[DseCell] = []
+    for p in profiles:
+        # Paper semantics: beta is a USER-DEFINED target per application,
+        # held constant across architecture variants (Table I compares
+        # variants against the same target).  Default: derived once from the
+        # baseline (first) variant.
+        from repro.core.congruence import default_beta
+
+        app_beta = beta if beta is not None else default_beta(p, variants[0])
+        for m in variants:
+            rep = profile_congruence(
+                p, m, timing_model=timing_model, beta=app_beta, clamp=clamp
+            )
+            cells.append(DseCell(app=p.name, variant=m.name, report=rep))
+    return DseTable(cells=cells, suites=dict(suites))

@@ -1,0 +1,106 @@
+"""Step-time estimation -- the "timing analysis" stage of the paper's flow.
+
+VPR re-runs *only* static timing on the fixed routed netlist when subsystem
+delays change.  Our analogue: evaluate a closed-form machine model over the
+fixed ``WorkloadProfile`` extracted from the compiled HLO.  Changing machine
+constants (including per-subsystem idealization) never triggers recompilation,
+which is what makes congruence profiling lightweight.
+
+Two timing models (DESIGN.md §2, adaptation note 1):
+  * ``serial``  -- t = t_compute + t_memory + t_interconnect.  Matches the
+    paper's critical-path semantics, where zeroing a subsystem removes its
+    full contribution.  Default for congruence scores.
+  * ``overlap`` -- t = max(terms), the Roofline ideal with perfect
+    compute/comm overlap.  Used for optimistic bounds in the DSE tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.costs import WorkloadProfile
+from repro.core.machine import ALL_SUBSYSTEMS, MachineModel, Subsystem
+
+TIMING_MODELS = ("serial", "overlap")
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingBreakdown:
+    """Per-subsystem time (seconds) plus the combined estimate."""
+
+    compute: float
+    memory: float
+    interconnect: float
+    total_serial: float
+    total_overlap: float
+
+    def term(self, subsystem: Subsystem) -> float:
+        return {
+            Subsystem.COMPUTE: self.compute,
+            Subsystem.MEMORY: self.memory,
+            Subsystem.INTERCONNECT: self.interconnect,
+        }[subsystem]
+
+    def total(self, model: str = "serial") -> float:
+        if model == "serial":
+            return self.total_serial
+        if model == "overlap":
+            return self.total_overlap
+        raise ValueError(f"unknown timing model {model!r}; have {TIMING_MODELS}")
+
+    @property
+    def dominant(self) -> Subsystem:
+        return max(ALL_SUBSYSTEMS, key=self.term)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute,
+            "memory_s": self.memory,
+            "interconnect_s": self.interconnect,
+            "serial_s": self.total_serial,
+            "overlap_s": self.total_overlap,
+        }
+
+
+def subsystem_times(profile: WorkloadProfile, machine: MachineModel) -> TimingBreakdown:
+    """The three roofline terms under ``machine``'s (possibly idealized) scales.
+
+    compute      = per-device HLO FLOPs / peak FLOP/s
+    memory       = per-device HLO bytes / HBM BW
+    interconnect = per-device collective bytes / ICI BW, with traffic that
+                   crosses the pod axis charged at the slower inter-pod rate.
+    """
+    s_c = machine.scale_for(Subsystem.COMPUTE)
+    s_m = machine.scale_for(Subsystem.MEMORY)
+    s_i = machine.scale_for(Subsystem.INTERCONNECT)
+
+    t_compute = s_c * profile.flops / machine.peak_flops
+    mem_bytes = profile.hbm_bytes if profile.hbm_bytes > 0 else profile.bytes_accessed
+    t_memory = s_m * mem_bytes / machine.hbm_bw
+
+    ici_bytes = profile.total_collective_bytes - profile.pod_collective_bytes
+    t_ici = ici_bytes / machine.ici_bw_total
+    t_pod = (
+        profile.pod_collective_bytes / machine.inter_pod_bw
+        if profile.pod_collective_bytes
+        else 0.0
+    )
+    t_interconnect = s_i * (t_ici + t_pod)
+
+    total_serial = t_compute + t_memory + t_interconnect
+    total_overlap = max(t_compute, t_memory, t_interconnect)
+    return TimingBreakdown(
+        compute=t_compute,
+        memory=t_memory,
+        interconnect=t_interconnect,
+        total_serial=total_serial,
+        total_overlap=total_overlap,
+    )
+
+
+def step_time(
+    profile: WorkloadProfile, machine: MachineModel, model: str = "serial"
+) -> float:
+    """Estimated step time in seconds (the paper's γ / α depending on scales)."""
+    return subsystem_times(profile, machine).total(model)

@@ -1,0 +1,67 @@
+"""Activation-sharding context.
+
+Model code calls ``constrain(x, kind)`` at block boundaries; the launcher
+installs the active rules (mesh + PartitionSpecs per activation kind) via the
+``use_rules`` context manager.  Outside any context it is the identity, so
+single-device tests and examples need no mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, object]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, object]):
+    """rules: {"acts": PartitionSpec, "logits": PartitionSpec, ...}."""
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shmap_info():
+    """(dp_axes, tp_axis, mesh) for explicit shard_map regions, or None."""
+    rules = _rules()
+    if rules and "shmap" in rules:
+        info = rules["shmap"]
+        return info["dp"], info["tp"], info["mesh"]
+    return None
+
+
+def data_parallel_groups() -> int:
+    """Number of data-parallel shards the launcher runs with (used by the
+    capacity-MoE dispatch to keep routing device-local); 1 outside a mesh."""
+    rules = _rules()
+    if rules and "dp_groups" in rules:
+        return int(rules["dp_groups"])  # type: ignore[arg-type]
+    return 1
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    rules = _rules()
+    if not rules or kind not in rules:
+        return x
+    spec = rules[kind]
+    if isinstance(spec, (int, dict)):
+        return x
+    pspec = getattr(spec, "spec", spec)  # NamedSharding -> its PartitionSpec
+    ndim = getattr(x, "ndim", None)
+    try:
+        if ndim is not None and len(pspec) > ndim:
+            return x
+    except TypeError:
+        pass
+    return jax.lax.with_sharding_constraint(x, spec)

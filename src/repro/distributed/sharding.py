@@ -1,0 +1,206 @@
+"""Logical-axis -> mesh sharding rules (DP / TP / EP / ZeRO / FSDP / pod).
+
+Models annotate parameters with logical axes ("embed", "heads", "mlp",
+"experts", "vocab", ...).  A sharding *variant* maps logical axes onto mesh
+axes; divisibility is checked per-tensor, replicating any axis that does not
+divide evenly (e.g. kv_heads=2 on a 16-way model axis).
+
+Variants (the software-densification DSE axis, DESIGN.md §4):
+  tp      -- baseline: TP over "model" (heads/mlp/vocab), DP over pod+data;
+             optimizer states follow parameters.
+  zero1   -- tp + optimizer states additionally sharded over "data"
+             (ZeRO stage 1).
+  fsdp    -- zero1 + parameters themselves sharded over "data" on their
+             largest replicated dim (ZeRO-3 / FSDP: XLA all-gathers per
+             layer, enabling compute/comm overlap and per-chip fit for the
+             67B/314B archs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SHARDING_VARIANTS = ("tp", "zero1", "fsdp")
+
+# logical axis -> mesh axis for tensor-parallel dims
+_TP_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",   # EP: experts over model axis when divisible,
+                          # else TP falls through to the "mlp" dim
+    "batch": "data",      # cache/batch leading dims
+}
+
+# logical axes never sharded
+_REPLICATED = {"layers", "head_dim", "conv", "state", "positions",
+               "mlp_block", None}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    variant: str = "tp"
+    multi_pod: bool = False
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for_tensor(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    sc: ShardingConfig,
+    *,
+    fsdp_this: bool = False,
+) -> P:
+    """PartitionSpec for one tensor given its logical axes."""
+    assert len(shape) == len(axes), (shape, axes)
+    entries: list = []
+    used = set()
+    model_wanted_failed = False
+    for dim, ax in zip(shape, axes):
+        mesh_ax: Optional[str] = None
+        if ax == "batch":
+            # batch dims shard over the full data-parallel hierarchy
+            total = 1
+            for a in sc.data_axes:
+                total *= _axis_size(mesh, a)
+            if dim % total == 0 and not used.intersection(sc.data_axes):
+                entries.append(sc.data_axes if len(sc.data_axes) > 1
+                               else sc.data_axes[0])
+                used.update(sc.data_axes)
+                continue
+            entries.append(None)
+            continue
+        if ax not in _REPLICATED:
+            cand = _TP_RULES.get(ax)
+            if cand is not None and cand not in used:
+                if dim % _axis_size(mesh, cand) == 0:
+                    mesh_ax = cand
+                elif cand == "model":
+                    model_wanted_failed = True
+        entries.append(mesh_ax)
+        if mesh_ax is not None:
+            used.add(mesh_ax)
+
+    if model_wanted_failed and "model" not in used:
+        # PaLM-style fallback: when kv_heads (MQA/GQA < TP degree) cannot be
+        # sharded, shard the head_dim instead -- keeps KV caches and k/v
+        # projections distributed rather than replicated TP-degree times.
+        for i, (dim, ax) in enumerate(zip(shape, axes)):
+            if (ax == "head_dim" and entries[i] is None
+                    and dim % _axis_size(mesh, "model") == 0):
+                entries[i] = "model"
+                used.add("model")
+                break
+
+    if fsdp_this:
+        # shard the largest still-replicated dim over "data"
+        dsize = _axis_size(mesh, "data")
+        best, best_dim = -1, 0
+        for i, (dim, e) in enumerate(zip(shape, entries)):
+            if e is None and dim % dsize == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0:
+            entries[best] = "data"
+    return P(*entries)
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def param_specs(
+    params: Any, axes: Any, mesh: Mesh, sc: ShardingConfig,
+    *, fsdp: Optional[bool] = None, min_fsdp_size: int = 2 ** 20,
+) -> Any:
+    """Pytree of NamedSharding for a (params, axes) pair.
+
+    fsdp: shard big replicated dims over "data" too (defaults to the
+    variant's behaviour); small tensors (< min_fsdp_size elements) stay
+    replicated to avoid pathological tiny collectives.
+    """
+    if fsdp is None:
+        fsdp = sc.variant == "fsdp"
+
+    def one(p, a):
+        size = 1
+        for d in p.shape:
+            size *= d
+        spec = spec_for_tensor(
+            p.shape, tuple(a), mesh, sc,
+            fsdp_this=fsdp and size >= min_fsdp_size,
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, params, axes)
+
+
+def opt_state_specs(
+    params: Any, axes: Any, mesh: Mesh, sc: ShardingConfig,
+    *, min_fsdp_size: int = 2 ** 20,
+) -> Any:
+    """Adam moment shardings: ZeRO-1+ shards them over "data" as well."""
+    zero = sc.variant in ("zero1", "fsdp")
+    return param_specs(params, axes, mesh, sc, fsdp=zero,
+                       min_fsdp_size=min_fsdp_size)
+
+
+def batch_spec(mesh: Mesh, sc: ShardingConfig, ndim: int = 2,
+               batch_size: Optional[int] = None) -> NamedSharding:
+    """Token batches: (B, S, ...) with B over pod+data (replicated when the
+    global batch does not divide the data-parallel world, e.g. long_500k)."""
+    total = 1
+    for a in sc.data_axes:
+        total *= _axis_size(mesh, a)
+    if batch_size is not None and batch_size % total != 0:
+        return NamedSharding(mesh, P(*([None] * ndim)))
+    lead = sc.data_axes if len(sc.data_axes) > 1 else sc.data_axes[0]
+    return NamedSharding(mesh, P(lead, *([None] * (ndim - 1))))
+
+
+def activation_rules(mesh: Mesh, sc: ShardingConfig,
+                     kind: str = "train") -> Dict[str, NamedSharding]:
+    """Rules consumed by repro.distributed.ctx.constrain.
+
+    Full-sequence kinds (train/prefill) shard the residual stream's sequence
+    dim over "model" between blocks (Megatron-style sequence parallelism):
+    layer-boundary activations and scan carries shrink by the TP degree,
+    which is what lets the 32k-seq cells fit 16 GB/chip.  XLA inserts the
+    all-gather before attention/MLP and the reduce-scatter after -- the
+    collective cost shows up in the interconnect roofline term where the
+    congruence profiler can see it.
+    """
+    lead = sc.data_axes if len(sc.data_axes) > 1 else sc.data_axes[0]
+    seq = "model" if kind in ("train", "prefill") else None
+    dp_groups = 1
+    for a in sc.data_axes:
+        dp_groups *= mesh.shape[a]
+    return {
+        "acts": NamedSharding(mesh, P(lead, seq, None)),
+        "logits": NamedSharding(mesh, P(lead, None, "model")),
+        "moe_tokens": NamedSharding(mesh, P(lead, None, None)),
+        "ssm_state": NamedSharding(mesh, P(lead, "model", None)),
+        "lru_state": NamedSharding(mesh, P(lead, "model")),
+        "lru_seq": NamedSharding(mesh, P(None, lead, "model")),
+        "ssm_chunks_d": NamedSharding(mesh, P(None, None, lead, "model")),
+        "dp_groups": dp_groups,
+        "shmap": {"dp": sc.data_axes, "tp": "model", "mesh": mesh},
+    }
+
+
+def scalar_spec(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

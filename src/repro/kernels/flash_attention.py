@@ -1,0 +1,155 @@
+"""Flash attention (tiled online-softmax) as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): the classic GPU flash attention is re-blocked
+for the TPU memory hierarchy -- q/k/v tiles staged HBM->VMEM via BlockSpec,
+MXU-aligned tile shapes (multiples of 128 on the lane dim), and the kv-block
+loop mapped onto the *sequential* innermost TPU grid dimension so the running
+(max, denom, acc) state lives in VMEM scratch across grid steps (no atomics,
+no shared-memory banking -- the TPU grid is the reduction loop).
+
+Supports GQA (kv head broadcast), causal masking and sliding windows.
+Validated against ``ref.flash_attention_ref`` in interpret mode on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,          # (1, 1, bq, d), (1, 1, bkv, d) x2
+    o_ref,                        # (1, 1, bq, d)
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    n_kv_blocks: int,
+):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    k_pos = ikv * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)
+
+    # whole-block skip: run the body only if any (q, k) pair is unmasked
+    live = jnp.bool_(True)
+    if causal:
+        # newest q in block vs oldest k in block
+        live = jnp.logical_and(live, (iq + 1) * block_q - 1 >= ikv * block_kv)
+    if window is not None:
+        # oldest q in block vs newest k in block
+        live = jnp.logical_and(
+            live, iq * block_q - ((ikv + 1) * block_kv - 1) < window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]                       # (bq, 1)
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bkv)
+        alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+
+    @pl.when(ikv == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[...]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows -> 0
+        o_ref[0, 0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,                 # (B, H, S, D)
+    k: jax.Array,                 # (B, K, T, D)
+    v: jax.Array,                 # (B, K, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    _, K, T, _ = k.shape
+    assert H % K == 0, (H, K)
+    group = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0, (S, block_q, T, block_kv)
+    n_q = S // block_q
+    n_kv = T // block_kv
+
+    kernel = functools.partial(
+        _attn_kernel,
+        causal=causal,
+        window=window,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv_blocks=n_kv,
+    )
+
+    grid = (B, H, n_q, n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ikv: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ikv: (b, h // group, ikv, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, iq, ikv: (b, h // group, ikv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ikv: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; on CPU (this container) they run in
+interpret mode, which executes the kernel body in Python for correctness
+validation.  ``interpret=None`` auto-detects.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import selective_scan as _scan
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: Optional[bool] = None):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv,
+        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: Optional[bool] = None):
+    return _rms.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_residual(x, residual, scale, *, eps: float = 1e-6,
+                     block_rows: int = 256,
+                     interpret: Optional[bool] = None):
+    return _rms.rmsnorm_residual(
+        x, residual, scale, eps=eps, block_rows=block_rows,
+        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_block", "interpret"))
+def selective_scan(xi, dt_raw, Bm, Cm, A, h0=None, *, chunk: int = 256,
+                   d_block: int = 512, interpret: Optional[bool] = None):
+    return _scan.selective_scan(
+        xi, dt_raw, Bm, Cm, A, h0, chunk=chunk, d_block=d_block,
+        interpret=_auto_interpret(interpret))

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` is the mathematically transparent implementation the kernels
+are validated against (tests sweep shapes/dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,                 # (B, H, S, D)
+    k: jax.Array,                 # (B, K, T, D)
+    v: jax.Array,                 # (B, K, T, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    _, K, T, _ = k.shape
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, K, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows produce uniform probs in softmax; zero them like the
+    # kernel does (l == 0 -> output 0)
+    any_live = jnp.any(mask, axis=-1)                    # (S,)
+    probs = probs * any_live[:, None]
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_residual_ref(
+    x: jax.Array, residual: jax.Array, scale: jax.Array, *, eps: float = 1e-6
+) -> Tuple[jax.Array, jax.Array]:
+    h = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    return rmsnorm_ref(h.astype(x.dtype), scale, eps=eps), h.astype(x.dtype)
+
+
+def selective_scan_ref(
+    xi: jax.Array,       # (B, S, Din)
+    dt_raw: jax.Array,   # (B, S, Din)
+    Bm: jax.Array,       # (B, S, N)
+    Cm: jax.Array,       # (B, S, N)
+    A: jax.Array,        # (Din, N)
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    B, S, Din = xi.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32))
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        dt_t, xi_t, b_t, c_t = t
+        dA = jnp.exp(dt_t[..., None] * Af[None])            # (B, Din, N)
+        dBx = (dt_t * xi_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (dt.swapaxes(0, 1), xi.astype(jnp.float32).swapaxes(0, 1),
+          Bm.astype(jnp.float32).swapaxes(0, 1),
+          Cm.astype(jnp.float32).swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(xi.dtype), hT

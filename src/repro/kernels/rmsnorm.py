@@ -1,0 +1,103 @@
+"""Fused RMSNorm (+ optional residual add) as a Pallas TPU kernel.
+
+One HBM->VMEM pass: the unfused XLA graph reads x three times (square-mean,
+normalize, scale); the fused kernel reads each row tile once and writes once,
+cutting HBM traffic ~3x on this memory-bound op.  Rows are tiled on the grid;
+the model dim stays whole in VMEM (d_model <= ~8k fits comfortably).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)               # (rows, d)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _rmsnorm_residual_kernel(x_ref, res_ref, scale_ref, o_ref, r_ref,
+                             *, eps: float):
+    h = x_ref[...].astype(jnp.float32) + res_ref[...].astype(jnp.float32)
+    r_ref[...] = h.astype(r_ref.dtype)
+    ms = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    y = h * jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (y * scale_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(
+    x: jax.Array,                  # (..., d)
+    scale: jax.Array,              # (d,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)
+
+
+def rmsnorm_residual(
+    x: jax.Array,
+    residual: jax.Array,
+    scale: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    """Fused (residual + x) -> rmsnorm.  Returns (normed, new_residual)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    r2 = residual.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        block_rows = 1
+    normed, new_res = pl.pallas_call(
+        functools.partial(_rmsnorm_residual_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+            jax.ShapeDtypeStruct((rows, d), x.dtype),
+        ],
+        interpret=interpret,
+    )(x2, r2, scale)
+    return normed.reshape(orig_shape), new_res.reshape(orig_shape)

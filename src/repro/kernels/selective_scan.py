@@ -1,0 +1,121 @@
+"""Mamba-1 selective scan as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): the CUDA mamba kernel holds per-thread state
+in registers and parallelizes over channels within an SM.  On TPU we block
+channels (d_inner) across the parallel grid dims and run the sequence as the
+*sequential* innermost grid dimension in chunks: the (d_blk, N) state lives
+in VMEM scratch across chunk steps, dA/dBx are computed on the fly per chunk
+(never materialized in HBM -- the same blocking the XLA fallback uses), and
+the chunk loop is a ``fori_loop`` over time steps inside VMEM.
+
+Layout notes: channels-last tiles (chunk, d_blk) keep the lane dimension on
+d_inner (128-aligned); the state update is VPU elementwise work, the y
+projection a (d_blk, N) x (N,) contraction per step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    xi_ref,      # (1, chunk, d_blk)
+    dt_ref,      # (1, chunk, d_blk)   pre-softplus dt (full-rank, post dt_proj)
+    b_ref,       # (1, chunk, N)
+    c_ref,       # (1, chunk, N)
+    a_ref,       # (d_blk, N)          negative A
+    h0_ref,      # (1, d_blk, N)       initial state for this (b, d_blk)
+    y_ref,       # (1, chunk, d_blk)
+    hT_ref,      # (1, d_blk, N)
+    h_scratch,   # VMEM (d_blk, N) f32
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)                   # (d_blk, N)
+    xi = xi_ref[0].astype(jnp.float32)                   # (chunk, d_blk)
+    dt = jax.nn.softplus(dt_ref[0].astype(jnp.float32))  # (chunk, d_blk)
+    bm = b_ref[0].astype(jnp.float32)                    # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)                    # (chunk, N)
+
+    def step(t, h):
+        dt_t = dt[t][:, None]                            # (d_blk, 1)
+        dA = jnp.exp(dt_t * a)                           # (d_blk, N)
+        dBx = (dt_t * xi[t][:, None]) * bm[t][None, :]   # (d_blk, N)
+        h = dA * h + dBx
+        y_t = jnp.sum(h * cm[t][None, :], axis=-1)       # (d_blk,)
+        y_ref[0, t, :] = y_t.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_scratch[...])
+    h_scratch[...] = h
+
+    @pl.when(ic == n_chunks - 1)
+    def _done():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+def selective_scan(
+    xi: jax.Array,       # (B, S, Din)  post-conv/silu
+    dt_raw: jax.Array,   # (B, S, Din)  pre-softplus dt (dt_proj output + bias)
+    Bm: jax.Array,       # (B, S, N)
+    Cm: jax.Array,       # (B, S, N)
+    A: jax.Array,        # (Din, N) negative
+    h0: Optional[jax.Array] = None,   # (B, Din, N)
+    *,
+    chunk: int = 256,
+    d_block: int = 512,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B,S,Din), hT: (B,Din,N))."""
+    B, S, Din = xi.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S
+    n_chunks = S // chunk
+    d_block = min(d_block, Din)
+    if Din % d_block != 0:
+        d_block = Din
+    n_dblk = Din // d_block
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk, n_chunks=n_chunks)
+    grid = (B, n_dblk, n_chunks)  # chunk dim innermost => sequential on TPU
+
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, d_block), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((d_block, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, d_block, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, d_block, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, Din), xi.dtype),
+            jax.ShapeDtypeStruct((B, Din, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, N), jnp.float32)],
+        interpret=interpret,
+    )(xi, dt_raw, Bm, Cm, A, h0)
+    return y, hT

@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct stand-ins for every model input (the dry-run contract).
+
+``input_specs(cfg, shape, mesh, sc)`` returns (args, in_shardings,
+out_shardings, step_fn, meta) for the cell's step function -- weak-type
+correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec, tokens_of
+from repro.distributed import sharding as SH
+from repro.models import transformer as T
+from repro.models.config import Family, ModelConfig
+from repro.optim import adamw
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.training.step import init_state, make_train_step
+
+
+def _sds(tree: Any, shardings: Any) -> Any:
+    """Attach shardings to a pytree of ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def _batch_struct(cfg: ModelConfig, shape: ShapeSpec, seq_len: int,
+                  batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    }
+    if cfg.family == Family.AUDIO:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq_len, cfg.d_model), jnp.float32)
+    if cfg.family == Family.VLM:
+        out["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+@dataclasses.dataclass
+class CellSpec:
+    step_fn: Any
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    mesh,
+    sc: SH.ShardingConfig,
+    oc: Optional[adamw.OptimizerConfig] = None,
+) -> CellSpec:
+    oc = oc or adamw.OptimizerConfig()
+    key = jax.random.PRNGKey(0)
+    total, active = cfg.param_counts()
+    tokens = tokens_of(cfg, shape)
+    meta = {
+        "params": total,
+        "params_active": active,
+        "tokens": tokens,
+        "step_kind": shape.kind,
+    }
+
+    state, axes = init_state(key, cfg, oc, abstract=True)
+    p_shard = SH.param_specs(state["params"], axes, mesh, sc)
+    o_shard = {
+        "m": SH.opt_state_specs(state["opt"]["m"], axes, mesh, sc),
+        "v": SH.opt_state_specs(state["opt"]["v"], axes, mesh, sc),
+        "step": SH.scalar_spec(mesh),
+    }
+    if "ef" in state["opt"]:
+        o_shard["ef"] = SH.opt_state_specs(state["opt"]["ef"], axes, mesh, sc)
+
+    if shape.kind == "train":
+        batch = _batch_struct(cfg, shape, shape.seq_len, shape.global_batch)
+        b_shard = jax.tree.map(
+            lambda t: SH.batch_spec(mesh, sc, ndim=t.ndim, batch_size=t.shape[0]), batch)
+        state_shard = {"params": p_shard, "opt": o_shard}
+        args = (_sds(state, state_shard), _sds(batch, b_shard))
+        metrics_shard = SH.scalar_spec(mesh)
+        return CellSpec(
+            step_fn=make_train_step(cfg, oc),
+            args=args,
+            in_shardings=(state_shard, b_shard),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+            meta=meta,
+        )
+
+    # inference kinds -----------------------------------------------------
+    params = state["params"]
+    B = shape.global_batch
+    cache, cache_axes = T.init_cache(cfg, B, shape.seq_len, abstract=True)
+    c_shard = SH.param_specs(cache, cache_axes, mesh, sc, fsdp=False)
+
+    if shape.kind == "prefill":
+        batch = _batch_struct(cfg, shape, shape.seq_len, B)
+        b_shard = jax.tree.map(
+            lambda t: SH.batch_spec(mesh, sc, ndim=t.ndim, batch_size=t.shape[0]), batch)
+        args = (_sds(params, p_shard), _sds(cache, c_shard),
+                _sds(batch, b_shard))
+        tok_out = NamedSharding(
+            mesh, P(sc.data_axes if len(sc.data_axes) > 1 else sc.data_axes[0]))
+        return CellSpec(
+            step_fn=make_prefill_step(cfg),
+            args=args,
+            in_shardings=(p_shard, c_shard, b_shard),
+            out_shardings=(c_shard, tok_out),
+            donate_argnums=(1,),
+            meta=meta,
+        )
+
+    # decode: one new token with a KV cache of seq_len
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = SH.batch_spec(mesh, sc, ndim=2, batch_size=B)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    idx_shard = SH.scalar_spec(mesh)
+    args = (_sds(params, p_shard), _sds(cache, c_shard),
+            jax.ShapeDtypeStruct(tok.shape, tok.dtype, sharding=tok_shard),
+            jax.ShapeDtypeStruct(idx.shape, idx.dtype, sharding=idx_shard))
+    tok_out = NamedSharding(mesh, SH.batch_spec(mesh, sc, ndim=1,
+                                                 batch_size=B).spec)
+    return CellSpec(
+        step_fn=make_serve_step(cfg),
+        args=args,
+        in_shardings=(p_shard, c_shard, tok_shard, idx_shard),
+        out_shardings=(c_shard, tok_out),
+        donate_argnums=(1,),
+        meta=meta,
+    )

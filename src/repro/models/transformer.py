@@ -1,0 +1,792 @@
+"""Model stacks for all assigned families.
+
+Public API:
+  init_model(key, cfg, abstract=False)       -> (params, axes)
+  forward(params, cfg, batch)                -> (hidden, aux_loss)
+  loss_fn(params, cfg, batch)                -> (loss, metrics)
+  init_cache(cfg, batch, max_len, abstract)  -> (cache, axes)
+  prefill(params, cfg, batch, cache)         -> (cache, logits_last)
+  decode_step(params, cfg, cache, tokens, index) -> (cache, logits)
+
+``batch`` is a dict: {"tokens": (B,S) int32, "labels": (B,S) int32, and for
+stub-frontend families "frames": (B,F,D) / "patches": (B,P,D)}.
+
+Layers are stacked along a leading "layers" axis and iterated with
+``lax.scan`` (keeps HLO size O(1) in depth); remat policy per config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import constrain
+from repro.models import layers as L
+from repro.models.config import Family, ModelConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+
+def _stack_init(init_fn: Callable, key, n: int, abstract: bool):
+    """vmap an (params, axes) init over n layers; prepend 'layers' to axes."""
+    keys = jax.random.split(key, n)
+    cap: Dict[str, Any] = {}
+
+    def wrapped(k):
+        p, a = init_fn(k)
+        cap["axes"] = a
+        return p
+
+    if abstract:
+        params = jax.eval_shape(jax.vmap(wrapped), keys)
+    else:
+        params = jax.vmap(wrapped)(keys)
+    axes = jax.tree.map(
+        lambda _, a: ("layers",) + tuple(a), params, cap["axes"]
+    )
+    return params, axes
+
+
+def _maybe(key, init_fn, abstract: bool):
+    if abstract:
+        cap = {}
+
+        def wrapped(k):
+            p, a = init_fn(k)
+            cap["axes"] = a
+            return p
+
+        params = jax.eval_shape(wrapped, key)
+        return params, cap["axes"]
+    return init_fn(key)
+
+
+def _remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------- #
+# per-family block definitions
+# --------------------------------------------------------------------------- #
+
+
+def _dense_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    attn_p, attn_a = L.attn_init(ks[0], cfg)
+    mlp_p, mlp_a = L.mlp_init(ks[1], cfg)
+    n1p, n1a = L.norm_init(cfg)
+    n2p, n2a = L.norm_init(cfg)
+    return (
+        {"attn": attn_p, "mlp": mlp_p, "ln1": n1p, "ln2": n2p},
+        {"attn": attn_a, "mlp": mlp_a, "ln1": n1a, "ln2": n2a},
+    )
+
+
+def _dense_block_apply(bp, cfg, x, *, rope, mask, q_pos=None, k_pos=None,
+                       cache=None, index=None):
+    h, new_kv = L.attn_apply(
+        bp["attn"], cfg, L.norm_apply(bp["ln1"], cfg, x),
+        rope=rope, mask=mask, q_pos=q_pos, k_pos=k_pos,
+        cache=cache, cache_index=index,
+    )
+    x = constrain(x + h, "acts")
+    y = L.mlp_apply(bp["mlp"], cfg, L.norm_apply(bp["ln2"], cfg, x))
+    return constrain(x + y, "acts"), new_kv, 0.0
+
+
+def _moe_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    attn_p, attn_a = L.attn_init(ks[0], cfg)
+    moe_p, moe_a = L.moe_init(ks[1], cfg)
+    n1p, n1a = L.norm_init(cfg)
+    n2p, n2a = L.norm_init(cfg)
+    return (
+        {"attn": attn_p, "moe": moe_p, "ln1": n1p, "ln2": n2p},
+        {"attn": attn_a, "moe": moe_a, "ln1": n1a, "ln2": n2a},
+    )
+
+
+def _moe_block_apply(bp, cfg, x, *, rope, mask, q_pos=None, k_pos=None,
+                     cache=None, index=None):
+    h, new_kv = L.attn_apply(
+        bp["attn"], cfg, L.norm_apply(bp["ln1"], cfg, x),
+        rope=rope, mask=mask, q_pos=q_pos, k_pos=k_pos,
+        cache=cache, cache_index=index,
+    )
+    x = constrain(x + h, "acts")
+    y, aux = L.moe_apply(bp["moe"], cfg, L.norm_apply(bp["ln2"], cfg, x))
+    return constrain(x + y, "acts"), new_kv, aux
+
+
+def _ssm_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    mp, ma = L.mamba_init(ks[0], cfg)
+    np_, na = L.norm_init(cfg)
+    return {"mamba": mp, "ln": np_}, {"mamba": ma, "ln": na}
+
+
+def _ssm_block_apply(bp, cfg, x, *, state=None):
+    h, new_state = L.mamba_apply(
+        bp["mamba"], cfg, L.norm_apply(bp["ln"], cfg, x),
+        state=state, scan_chunk=cfg.ssm.scan_chunk,
+    )
+    return constrain(x + h, "acts"), new_state, 0.0
+
+
+def _rec_block_init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    rp, ra = L.rglru_init(ks[0], cfg)
+    mp, ma = L.mlp_init(ks[1], cfg)
+    n1p, n1a = L.norm_init(cfg)
+    n2p, n2a = L.norm_init(cfg)
+    return (
+        {"rec": rp, "mlp": mp, "ln1": n1p, "ln2": n2p},
+        {"rec": ra, "mlp": ma, "ln1": n1a, "ln2": n2a},
+    )
+
+
+def _rec_block_apply(bp, cfg, x, *, state=None):
+    h, new_state = L.rglru_apply(
+        bp["rec"], cfg, L.norm_apply(bp["ln1"], cfg, x), state=state
+    )
+    x = constrain(x + h, "acts")
+    y = L.mlp_apply(bp["mlp"], cfg, L.norm_apply(bp["ln2"], cfg, x))
+    return constrain(x + y, "acts"), new_state, 0.0
+
+
+def _xattn_block_init(key, cfg: ModelConfig):
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    ks = jax.random.split(key, 5)
+    self_p, self_a = L.attn_init(ks[0], cfg)
+    cross_p, cross_a = L.attn_init(ks[1], cfg)
+    mlp_p, mlp_a = L.mlp_init(ks[2], cfg)
+    norms = [L.norm_init(cfg) for _ in range(3)]
+    return (
+        {"self": self_p, "cross": cross_p, "mlp": mlp_p,
+         "ln1": norms[0][0], "ln2": norms[1][0], "ln3": norms[2][0]},
+        {"self": self_a, "cross": cross_a, "mlp": mlp_a,
+         "ln1": norms[0][1], "ln2": norms[1][1], "ln3": norms[2][1]},
+    )
+
+
+def _xattn_block_apply(bp, cfg, x, *, mask, q_pos=None, k_pos=None,
+                       enc_out=None, cache=None, index=None):
+    self_cache = cache["self"] if cache is not None else None
+    h, new_self = L.attn_apply(
+        bp["self"], cfg, L.norm_apply(bp["ln1"], cfg, x),
+        mask=mask, q_pos=q_pos, k_pos=k_pos,
+        cache=self_cache, cache_index=index,
+    )
+    x = constrain(x + h, "acts")
+    cross_cache = cache["cross"] if cache is not None else None
+    h, _ = L.attn_apply(
+        bp["cross"], cfg, L.norm_apply(bp["ln2"], cfg, x),
+        kv_x=enc_out, cache=cross_cache,
+        static_cache=cross_cache is not None,
+    )
+    x = constrain(x + h, "acts")
+    y = L.mlp_apply(bp["mlp"], cfg, L.norm_apply(bp["ln3"], cfg, x))
+    return constrain(x + y, "acts"), new_self, 0.0
+
+
+# --------------------------------------------------------------------------- #
+# model init
+# --------------------------------------------------------------------------- #
+
+
+_BLOCK_INIT = {
+    Family.DENSE: _dense_block_init,
+    Family.VLM: _dense_block_init,
+    Family.MOE: _moe_block_init,
+    Family.SSM: _ssm_block_init,
+}
+
+
+def hybrid_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_groups, n_tail_rec) for the hybrid pattern scan."""
+    period = len(cfg.hybrid.pattern)
+    n_groups = cfg.n_layers // period
+    return n_groups, cfg.n_layers - n_groups * period
+
+
+def init_model(key, cfg: ModelConfig, abstract: bool = False):
+    ks = jax.random.split(key, 8)
+    params: Params = {}
+    axes: Params = {}
+
+    p, a = _maybe(ks[0], lambda k: L.embed_init(k, cfg), abstract)
+    params["embed"], axes["embed"] = p, a
+    p, a = _maybe(ks[1], lambda k: L.norm_init(cfg), abstract)
+    params["final_norm"], axes["final_norm"] = p, a
+
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE, Family.SSM):
+        init_fn = functools.partial(_BLOCK_INIT[cfg.family], cfg=cfg)
+        params["layers"], axes["layers"] = _stack_init(
+            lambda k: init_fn(k), ks[2], cfg.n_layers, abstract
+        )
+    elif cfg.family == Family.HYBRID:
+        n_groups, n_tail = hybrid_layout(cfg)
+
+        def group_init(k):
+            k1, k2 = jax.random.split(k)
+            rec_p, rec_a = _stack_init(
+                lambda kk: _rec_block_init(kk, cfg), k1, 2, abstract=False
+            )
+            att_p, att_a = _dense_block_init(k2, cfg)
+            return {"rec": rec_p, "att": att_p}, {"rec": rec_a, "att": att_a}
+
+        params["groups"], axes["groups"] = _stack_init(
+            group_init, ks[2], n_groups, abstract
+        )
+        if n_tail:
+            params["tail"], axes["tail"] = _stack_init(
+                lambda k: _rec_block_init(k, cfg), ks[3], n_tail, abstract
+            )
+    elif cfg.family == Family.AUDIO:
+        params["enc_layers"], axes["enc_layers"] = _stack_init(
+            lambda k: _dense_block_init(k, cfg.replace(rope_style="none")),
+            ks[2], cfg.n_encoder_layers, abstract,
+        )
+        params["dec_layers"], axes["dec_layers"] = _stack_init(
+            lambda k: _xattn_block_init(k, cfg), ks[3], cfg.n_layers, abstract
+        )
+        p, a = _maybe(ks[4], lambda k: L.norm_init(cfg), abstract)
+        params["enc_norm"], axes["enc_norm"] = p, a
+
+        def pos_init(k):
+            enc = L._init_dense(k, (cfg.encoder_seq_len, cfg.d_model),
+                                L.dtype_of(cfg.param_dtype), scale=0.02)
+            return enc, ("positions", "embed")
+
+        p, a = _maybe(ks[5], pos_init, abstract)
+        params["enc_pos"], axes["enc_pos"] = p, a
+
+        if cfg.decoder_pos_len:
+            def dpos_init(k):
+                dec = L._init_dense(k, (cfg.decoder_pos_len, cfg.d_model),
+                                    L.dtype_of(cfg.param_dtype), scale=0.02)
+                return dec, ("positions", "embed")
+
+            p, a = _maybe(ks[6], dpos_init, abstract)
+            params["dec_pos"], axes["dec_pos"] = p, a
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    return params, axes
+
+
+# --------------------------------------------------------------------------- #
+# forward (train / full-sequence)
+# --------------------------------------------------------------------------- #
+
+
+def _rope_for(cfg: ModelConfig, positions: jax.Array):
+    if cfg.rope_style == "none":
+        return None
+    return L.rope_tables(positions, L.rotary_dim_of(cfg), cfg.rope_theta)
+
+
+def _scan_blocks(cfg: ModelConfig, stacked, x, body):
+    """scan over stacked layer params; body(bp, x) -> (x, aux)."""
+
+    def f(carry, bp):
+        xx, aux = carry
+        xx, aux_d = body(bp, xx)
+        return (xx, aux + aux_d), None
+
+    f = _remat(cfg, f)
+    if cfg.scan_layers:
+        (x, aux), _ = lax.scan(f, (x, 0.0), stacked)
+    else:
+        carry = (x, 0.0)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            bp = jax.tree.map(lambda t: t[i], stacked)
+            carry, _ = f(carry, bp)
+        x, aux = carry
+    return x, aux
+
+
+
+def _scan_or_unroll(cfg: ModelConfig, body, carry, xs):
+    """lax.scan when cfg.scan_layers, else an unrolled python loop (used by
+    the dry-run cost probes -- XLA's cost_analysis counts while-loop bodies
+    once, so probes compile unrolled at reduced depth)."""
+    if cfg.scan_layers:
+        return lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *x: jnp.stack(x), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _scan_blocks_cached(cfg: ModelConfig, stacked, cache, x, body):
+    """scan over (stacked params, stacked cache); body -> (x, new_c, aux)."""
+
+    def f(carry, xs):
+        xx, aux = carry
+        bp, c = xs
+        xx, new_c, aux_d = body(bp, xx, c)
+        return (xx, aux + aux_d), new_c
+
+    f = _remat(cfg, f)
+    (x, aux), new_cache = _scan_or_unroll(cfg, f, (x, 0.0), (stacked, cache))
+    return x, aux, new_cache
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    cache=None,
+):
+    """Full-sequence forward -> (hidden (B,S,D), aux_loss[, new_cache]).
+
+    With ``cache`` (prefill mode) the per-layer k/v / recurrent states are
+    written in the same pass (single-pass prefill; no recompute)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], cfg, tokens)
+    x = constrain(x, "acts")
+    prefix_len = 0
+
+    if cfg.family == Family.VLM:
+        patches = batch["patches"].astype(x.dtype)  # SigLIP stub embeddings
+        x = jnp.concatenate([patches, x], axis=1)
+        prefix_len = patches.shape[1]
+        S = x.shape[1]
+
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    rope = _rope_for(cfg, positions)
+    q_pos = positions
+    new_cache = None
+
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        block = (_moe_block_apply if cfg.family == Family.MOE
+                 else _dense_block_apply)
+        mask = L.MaskSpec(causal=True, window=cfg.attn_window,
+                          prefix_len=prefix_len)
+        if cache is not None:
+            S_cache = cache["k"].shape[2]
+            k_pos = jnp.broadcast_to(
+                jnp.arange(S_cache, dtype=jnp.int32)[None], (B, S_cache))
+            body = lambda bp, xx, c: block(bp, cfg, xx, rope=rope, mask=mask,
+                                           q_pos=q_pos, k_pos=k_pos,
+                                           cache=c, index=0)
+            x, aux, new_cache = _scan_blocks_cached(
+                cfg, params["layers"], cache, x, body)
+        else:
+            body = lambda bp, xx: block(bp, cfg, xx, rope=rope, mask=mask,
+                                        q_pos=q_pos, k_pos=q_pos)[::2]
+            x, aux = _scan_blocks(cfg, params["layers"], x, body)
+
+    elif cfg.family == Family.SSM:
+        if cache is not None:
+            body = lambda bp, xx, c: _ssm_block_apply(bp, cfg, xx, state=c)
+            x, aux, new_cache = _scan_blocks_cached(
+                cfg, params["layers"], cache, x, body)
+        else:
+            body = lambda bp, xx: _ssm_block_apply(bp, cfg, xx)[::2]
+            x, aux = _scan_blocks(cfg, params["layers"], x, body)
+
+    elif cfg.family == Family.HYBRID:
+        window = cfg.attn_window
+        mask = L.MaskSpec(causal=True, window=window)
+
+        if cache is not None:
+            W = cache["groups"]["att"]["k"].shape[2]
+
+            def group_body(gp, xx, c):
+                def rec_body(bp, xxx, st):
+                    return _rec_block_apply(bp, cfg, xxx, state=st)
+
+                xx, _, new_rec = _scan_blocks_cached(
+                    cfg.replace(remat="none"), gp["rec"], c["rec"], xx, rec_body)
+                # local attention + ring-buffer write of the last W positions
+                xx2, _, _ = _dense_block_apply(gp["att"], cfg, xx,
+                                               rope=rope, mask=mask,
+                                               q_pos=q_pos, k_pos=q_pos)
+                cd = L.dtype_of(cfg.compute_dtype)
+                xn = L.norm_apply(gp["att"]["ln1"], cfg, xx)
+                k = jnp.einsum("bsd,dhk->bshk", xn.astype(cd),
+                               gp["att"]["attn"]["wk"].astype(cd))
+                v = jnp.einsum("bsd,dhk->bshk", xn.astype(cd),
+                               gp["att"]["attn"]["wv"].astype(cd))
+                if rope is not None:
+                    k = L.apply_rope(k, *rope, cfg.rope_style)
+                SS = k.shape[1]
+                take = min(W, SS)
+                pos0 = SS - take
+                slots = (pos0 + jnp.arange(take)) % W
+                new_k = c["att"]["k"].at[:, slots].set(
+                    k[:, -take:].astype(c["att"]["k"].dtype))
+                new_v = c["att"]["v"].at[:, slots].set(
+                    v[:, -take:].astype(c["att"]["v"].dtype))
+                return xx2, {"rec": new_rec,
+                             "att": {"k": new_k, "v": new_v}}, 0.0
+
+            x, aux, new_groups = _scan_blocks_cached(
+                cfg, params["groups"], cache["groups"], x, group_body)
+            new_cache = {"groups": new_groups}
+            if "tail" in params:
+                body = lambda bp, xx, st: _rec_block_apply(bp, cfg, xx, state=st)
+                x, _, new_tail = _scan_blocks_cached(
+                    cfg, params["tail"], cache["tail"], x, body)
+                new_cache["tail"] = new_tail
+        else:
+            def group_body2(gp, xx):
+                def rec_body(bp, xxx):
+                    return _rec_block_apply(bp, cfg, xxx)[::2]
+                xx, _ = _scan_blocks(cfg.replace(remat="none"), gp["rec"],
+                                     xx, rec_body)
+                xx, _, _ = _dense_block_apply(gp["att"], cfg, xx,
+                                              rope=rope, mask=mask,
+                                              q_pos=q_pos, k_pos=q_pos)
+                return xx, 0.0
+
+            x, aux = _scan_blocks(cfg, params["groups"], x, group_body2)
+            if "tail" in params:
+                body = lambda bp, xx: _rec_block_apply(bp, cfg, xx)[::2]
+                x, tail_aux = _scan_blocks(cfg, params["tail"], x, body)
+                aux = aux + tail_aux
+
+    elif cfg.family == Family.AUDIO:
+        if "dec_pos" in params:
+            x = x + params["dec_pos"].astype(x.dtype)[None, :S]
+        enc = encode(params, cfg, batch["frames"])
+        mask = L.MaskSpec(causal=True)
+        if cache is not None:
+            S_cache = cache["self"]["k"].shape[2]
+            k_pos = jnp.broadcast_to(
+                jnp.arange(S_cache, dtype=jnp.int32)[None], (B, S_cache))
+            body = lambda bp, xx, c: (
+                lambda r: (r[0], {"self": r[1], "cross": c["cross"]}, r[2])
+            )(_xattn_block_apply(bp, cfg, xx, mask=mask, q_pos=q_pos,
+                                 k_pos=k_pos, enc_out=enc, cache=c, index=0))
+            x, aux, new_cache = _scan_blocks_cached(
+                cfg, params["dec_layers"], cache, x, body)
+        else:
+            body = lambda bp, xx: _xattn_block_apply(
+                bp, cfg, xx, mask=mask, q_pos=q_pos, k_pos=q_pos,
+                enc_out=enc)[::2]
+            x, aux = _scan_blocks(cfg, params["dec_layers"], x, body)
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], cfg, x)
+    if cfg.family == Family.VLM:
+        x = x[:, prefix_len:]  # loss only over text positions
+    if cache is not None:
+        return x, aux, new_cache
+    return x, aux
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, F, D)."""
+    x = frames.astype(L.dtype_of(cfg.compute_dtype))
+    x = x + params["enc_pos"].astype(x.dtype)[None, : x.shape[1]]
+    B, F = x.shape[0], x.shape[1]
+    mask = L.MaskSpec(everything=True)
+    enc_cfg = cfg.replace(rope_style="none")
+    body = lambda bp, xx: _dense_block_apply(
+        bp, enc_cfg, xx, rope=None, mask=mask)[::2]
+    x, _ = _scan_blocks(cfg, params["enc_layers"], x, body)
+    return L.norm_apply(params["enc_norm"], cfg, x)
+
+
+# --------------------------------------------------------------------------- #
+# loss
+# --------------------------------------------------------------------------- #
+
+
+def _xent(params, cfg, hidden, labels):
+    """Mean token cross-entropy; optionally chunked over sequence."""
+    cd = L.dtype_of(cfg.compute_dtype)
+
+    def chunk_loss(h_chunk, y_chunk):
+        logits = L.unembed_apply(params["embed"], cfg, h_chunk)
+        logits = constrain(logits, "logits").astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, y_chunk[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        correct = jnp.argmax(logits, axis=-1) == y_chunk
+        return jnp.sum(lse - picked), jnp.sum(correct)
+
+    B, S, _ = hidden.shape
+    if cfg.logits_chunk and S % cfg.logits_chunk == 0 and S > cfg.logits_chunk:
+        n = S // cfg.logits_chunk
+        hs = hidden.reshape(B, n, cfg.logits_chunk, -1).swapaxes(0, 1)
+        ys = labels.reshape(B, n, cfg.logits_chunk).swapaxes(0, 1)
+
+        def f(acc, xs):
+            h, y = xs
+            ls, cs = jax.checkpoint(chunk_loss)(h, y)
+            return (acc[0] + ls, acc[1] + cs), None
+
+        (loss_sum, correct), _ = lax.scan(f, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ys))
+    else:
+        loss_sum, correct = chunk_loss(hidden, labels)
+
+    denom = jnp.float32(B * S)
+    return loss_sum / denom, correct / denom
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    hidden, aux = forward(params, cfg, batch)
+    loss, acc = _xent(params, cfg, hidden, batch["labels"])
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux, "accuracy": acc}
+
+
+# --------------------------------------------------------------------------- #
+# caches + decode
+# --------------------------------------------------------------------------- #
+
+
+def _kv_cache_shape(cfg, n_layers, B, S):
+    return {
+        "k": jnp.zeros((n_layers, B, S, cfg.n_kv_heads, cfg.head_dim_),
+                       L.dtype_of(cfg.compute_dtype)),
+        "v": jnp.zeros((n_layers, B, S, cfg.n_kv_heads, cfg.head_dim_),
+                       L.dtype_of(cfg.compute_dtype)),
+    }
+
+
+_KV_AXES = {"k": ("layers", "batch", None, "kv_heads", "head_dim"),
+            "v": ("layers", "batch", None, "kv_heads", "head_dim")}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               abstract: bool = False):
+    """Decode cache + logical axes.  max_len = full context length."""
+    B = batch_size
+
+    def build():
+        if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+            S = max_len + (cfg.n_vision_tokens if cfg.family == Family.VLM else 0)
+            if cfg.attn_window:
+                S = min(S, cfg.attn_window)
+            return _kv_cache_shape(cfg, cfg.n_layers, B, S), dict(_KV_AXES)
+        if cfg.family == Family.SSM:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            cache = {
+                "conv": jnp.zeros((cfg.n_layers, B, s.conv_width - 1, d_in),
+                                  L.dtype_of(cfg.compute_dtype)),
+                "ssm": jnp.zeros((cfg.n_layers, B, d_in, s.state_dim), jnp.float32),
+            }
+            ax = {"conv": ("layers", "batch", None, "mlp"),
+                  "ssm": ("layers", "batch", "mlp", "state")}
+            return cache, ax
+        if cfg.family == Family.HYBRID:
+            h = cfg.hybrid
+            w = h.lru_width or cfg.d_model
+            n_groups, n_tail = hybrid_layout(cfg)
+            W = min(max_len, cfg.attn_window or max_len)
+
+            def rec_state(n_outer, n_inner=None):
+                lead = (n_outer,) if n_inner is None else (n_outer, n_inner)
+                return {
+                    "conv": jnp.zeros(lead + (B, h.conv_width - 1, w),
+                                      L.dtype_of(cfg.compute_dtype)),
+                    "lru": jnp.zeros(lead + (B, w), jnp.float32),
+                }
+
+            def rec_axes(extra):
+                return {"conv": extra + ("batch", None, "mlp"),
+                        "lru": extra + ("batch", "mlp")}
+
+            cache = {
+                "groups": {
+                    "rec": rec_state(n_groups, 2),
+                    "att": _kv_cache_shape(cfg, n_groups, B, W),
+                },
+            }
+            ax = {
+                "groups": {
+                    "rec": rec_axes(("layers", None)),
+                    "att": dict(_KV_AXES),
+                },
+            }
+            if n_tail:
+                cache["tail"] = rec_state(n_tail)
+                ax["tail"] = rec_axes(("layers",))
+            return cache, ax
+        if cfg.family == Family.AUDIO:
+            cache = {
+                "self": _kv_cache_shape(cfg, cfg.n_layers, B, max_len),
+                "cross": _kv_cache_shape(cfg, cfg.n_layers, B, cfg.encoder_seq_len),
+            }
+            ax = {"self": dict(_KV_AXES), "cross": dict(_KV_AXES)}
+            return cache, ax
+        raise ValueError(cfg.family)  # pragma: no cover
+
+    if abstract:
+        cap = {}
+
+        def w():
+            c, a = build()
+            cap["a"] = a
+            return c
+
+        cache = jax.eval_shape(w)
+        return cache, cap["a"]
+    return build()
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache,
+                tokens: jax.Array, index: jax.Array):
+    """One-token decode.  tokens: (B, 1); index: scalar position of the new
+    token in the context.  Returns (new_cache, logits (B, 1, V))."""
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], cfg, tokens)
+    if cfg.family == Family.VLM:
+        index = index + cfg.n_vision_tokens  # cache slots are absolute
+    positions = jnp.full((B, 1), index, jnp.int32)
+    rope = _rope_for(cfg, positions)
+    q_pos = positions
+
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        S_cache = cache["k"].shape[2]
+        if cfg.attn_window and S_cache <= cfg.attn_window:
+            # ring-buffer slots; all slots <= index are valid within window
+            slot = index % S_cache
+            k_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32)[None],
+                                     (B, S_cache))
+            # slot i holds position: latest p <= index with p % S == i
+            k_pos = index - ((index - k_pos) % S_cache)
+            write_index = slot
+        else:
+            k_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32)[None],
+                                     (B, S_cache))
+            write_index = index
+        mask = L.MaskSpec(causal=True, window=cfg.attn_window)
+
+        block = (_moe_block_apply if cfg.family == Family.MOE
+                 else _dense_block_apply)
+
+        def f(xx, xs):
+            bp, c = xs
+            xx, new_kv, _ = block(bp, cfg, xx, rope=rope, mask=mask,
+                                  q_pos=q_pos, k_pos=k_pos,
+                                  cache=c, index=write_index)
+            return xx, new_kv
+
+        x, new_cache = _scan_or_unroll(cfg, f, x, (params["layers"], cache))
+
+    elif cfg.family == Family.SSM:
+        def f(xx, xs):
+            bp, c = xs
+            xx, new_state, _ = _ssm_block_apply(bp, cfg, xx, state=c)
+            return xx, new_state
+
+        x, new_cache = _scan_or_unroll(cfg, f, x, (params["layers"], cache))
+
+    elif cfg.family == Family.HYBRID:
+        W = cache["groups"]["att"]["k"].shape[2]
+        slot = index % W
+        k_pos = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None], (B, W))
+        k_pos = index - ((index - k_pos) % W)
+        mask = L.MaskSpec(causal=True, window=cfg.attn_window)
+
+        def group_f(xx, xs):
+            gp, c = xs
+
+            def rec_f(xxx, rs):
+                bp, st = rs
+                xxx, new_st, _ = _rec_block_apply(bp, cfg, xxx, state=st)
+                return xxx, new_st
+
+            xx, new_rec = _scan_or_unroll(cfg, rec_f, xx, (gp["rec"], c["rec"]))
+            xx, new_kv, _ = _dense_block_apply(
+                gp["att"], cfg, xx, rope=rope, mask=mask,
+                q_pos=q_pos, k_pos=k_pos,
+                cache=c["att"], index=slot)
+            return xx, {"rec": new_rec, "att": new_kv}
+
+        x, new_groups = _scan_or_unroll(
+            cfg, group_f, x, (params["groups"], cache["groups"]))
+        new_cache = {"groups": new_groups}
+        if "tail" in cache:
+            def rec_f(xx, rs):
+                bp, st = rs
+                xx, new_st, _ = _rec_block_apply(bp, cfg, xx, state=st)
+                return xx, new_st
+
+            x, new_tail = _scan_or_unroll(
+                cfg, rec_f, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+
+    elif cfg.family == Family.AUDIO:
+        if "dec_pos" in params:
+            x = x + lax.dynamic_slice_in_dim(
+                params["dec_pos"], index, 1, axis=0).astype(x.dtype)[None]
+        S_cache = cache["self"]["k"].shape[2]
+        k_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32)[None],
+                                 (B, S_cache))
+        mask = L.MaskSpec(causal=True)
+
+        def f(xx, xs):
+            bp, c = xs
+            xx, new_self, _ = _xattn_block_apply(
+                bp, cfg, xx, mask=mask, q_pos=q_pos, k_pos=k_pos,
+                cache=c, index=index)
+            return xx, {"self": new_self, "cross": c["cross"]}
+
+        x, new_cache = _scan_or_unroll(cfg, f, x, (params["dec_layers"], cache))
+    else:  # pragma: no cover
+        raise ValueError(cfg.family)
+
+    x = L.norm_apply(params["final_norm"], cfg, x)
+    logits = L.unembed_apply(params["embed"], cfg, x)
+    return new_cache, logits
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array], cache):
+    """Run the full prompt, fill the cache, return (cache, last-token logits).
+
+    Single-pass: cache writes happen inside the same forward (no recompute).
+    Decode equivalence is asserted in tests.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+
+    if cfg.family == Family.AUDIO:
+        enc = encode(params, cfg, batch["frames"])
+        # precompute per-layer cross k/v into the cache
+        cd = L.dtype_of(cfg.compute_dtype)
+
+        def xkv(carry, bp):
+            k = jnp.einsum("bsd,dhk->bshk", enc.astype(cd), bp["cross"]["wk"].astype(cd))
+            v = jnp.einsum("bsd,dhk->bshk", enc.astype(cd), bp["cross"]["wv"].astype(cd))
+            return carry, {"k": k, "v": v}
+
+        _, cross = _scan_or_unroll(cfg, xkv, 0, params["dec_layers"])
+        cache = dict(cache)
+        cache["cross"] = cross
+
+    hidden, _, new_cache = forward(params, cfg, batch, cache=cache)
+    logits = L.unembed_apply(params["embed"], cfg, hidden[:, -1:])
+    return new_cache, logits

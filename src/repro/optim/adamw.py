@@ -1,0 +1,117 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, and an optional
+error-feedback int8 gradient-compression hook (distributed-optimization
+trick; off by default -- see DESIGN.md §6)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_grads: bool = False   # int8 quantize + error feedback
+
+
+def schedule(step: jax.Array, oc: OptimizerConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - oc.warmup_steps)
+        / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    decay = oc.min_lr_ratio + (1.0 - oc.min_lr_ratio) * cos
+    return oc.peak_lr * warm * decay
+
+
+def init(params: Any, oc: OptimizerConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if oc.compress_grads:
+        state["ef"] = jax.tree.map(zeros, params)  # error-feedback residual
+    return state
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _compress(g: jax.Array, residual: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """int8 stochastic-free quantization with error feedback.
+
+    Emulates a compressed all-reduce: the value that crosses the wire is the
+    dequantized int8 tensor; the quantization error stays local in ``ef``.
+    """
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def update(
+    grads: Any,
+    state: Dict[str, Any],
+    params: Any,
+    oc: OptimizerConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+
+    if oc.compress_grads:
+        pairs = jax.tree.map(_compress, grads, state["ef"])
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_ef = jax.tree.map(lambda pr: pr[1], pairs,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_ef = state.get("ef")
+
+    gnorm = global_norm(grads)
+    clip_scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if oc.clip_norm else jnp.float32(1.0)
+    lr = schedule(step, oc)
+
+    bc1 = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * clip_scale
+        m = oc.b1 * m + (1.0 - oc.b1) * gf
+        v = oc.b2 * v + (1.0 - oc.b2) * jnp.square(gf)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if new_ef is not None:
+        new_state["ef"] = new_ef
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, stats

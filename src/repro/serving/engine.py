@@ -1,0 +1,127 @@
+"""Serving: prefill/decode steps and a batched continuous-batching scheduler.
+
+``make_serve_step(cfg)`` returns the one-token decode step used by the
+``decode_*`` / ``long_*`` dry-run shapes: given a KV cache covering
+``seq_len`` context, decode exactly one new token per sequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens (B,1), index) -> (cache, next_tokens)."""
+
+    def serve_step(params, cache, tokens, index):
+        cache, logits = T.decode_step(params, cfg, cache, tokens, index)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, next_tokens
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, cache, batch):
+        cache, logits = T.prefill(params, cfg, batch, cache)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, next_tokens
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------------- #
+# Minimal continuous-batching engine (CPU-scale example driver)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class BatchedEngine:
+    """Fixed-slot continuous batching: finished requests release their slot,
+    waiting requests are admitted, all slots decode in lockstep (the standard
+    serving dataflow, scaled down to run on CPU in the examples)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.cache, _ = T.init_cache(cfg, slots, max_len)
+        self.active: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.free = list(range(slots))
+        self.pos = [0] * slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(make_serve_step(cfg))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        while self.queue and self.free:
+            req = self.queue.pop(0)
+            slot = self.free.pop(0)
+            self.active[req.rid] = req
+            self.slot_of[req.rid] = slot
+            # prefill this slot token-by-token (keeps one decode code path)
+            toks = req.prompt
+            for i, t in enumerate(toks):
+                tok = jnp.zeros((self.slots, 1), jnp.int32).at[slot, 0].set(t)
+                self.cache, nxt = self._decode(
+                    self.params, self.cache, tok, jnp.int32(i))
+            self.pos[slot] = len(toks)
+            req.generated.append(int(nxt[slot]))
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One lockstep decode over all active slots; returns (rid, token)."""
+        self._admit()
+        if not self.active:
+            return []
+        # all slots share a position index in this simplified engine; use max
+        index = max(self.pos[self.slot_of[r]] for r in self.active)
+        tok = jnp.zeros((self.slots, 1), jnp.int32)
+        for rid, req in self.active.items():
+            tok = tok.at[self.slot_of[rid], 0].set(req.generated[-1])
+        self.cache, nxt = self._decode(self.params, self.cache, tok,
+                                       jnp.int32(index))
+        out = []
+        finished = []
+        for rid, req in list(self.active.items()):
+            slot = self.slot_of[rid]
+            t = int(nxt[slot])
+            req.generated.append(t)
+            self.pos[slot] += 1
+            out.append((rid, t))
+            if req.done or self.pos[slot] >= self.max_len - 1:
+                finished.append(rid)
+        for rid in finished:
+            slot = self.slot_of.pop(rid)
+            self.active.pop(rid)
+            self.free.append(slot)
+            self.pos[slot] = 0
+        return out
+
+    def run_to_completion(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.active or self.queue) and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,208 @@
+"""The paper's core: Eq. 1 congruence scores, idealization, DSE.
+
+Validates the paper's own claims (DESIGN.md §8):
+  1. score ~ 1 <=> dominant bottleneck, ~ 0 <=> minimal impact
+  2. bottleneck shifts as the dominant subsystem improves (Fig. 2)
+  3. aggregate = L2 magnitude; lower = better fit; Table I structure
+  4. compile-once/analyze-many: scoring never needs recompilation
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ALL_SUBSYSTEMS,
+    IDEAL_EPS,
+    Subsystem,
+    TPU_V5E,
+    VARIANTS,
+    WorkloadProfile,
+    congruence_score,
+    evaluate,
+    profile_congruence,
+    step_time,
+    subsystem_times,
+)
+
+
+def make_profile(flops=1e12, hbm=1e9, coll=1e9, name="app", **kw):
+    return WorkloadProfile(
+        name=name, flops=flops, hbm_bytes=hbm, bytes_accessed=hbm,
+        collective_bytes={"all-reduce": coll}, num_devices=256,
+        model_flops=flops * 0.8 * 256, tokens=1000, **kw,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Eq. 1 properties (hypothesis)
+# --------------------------------------------------------------------------- #
+
+
+@given(
+    gamma=st.floats(1e-6, 1e3),
+    alpha_frac=st.floats(0.0, 1.0),
+    beta_frac=st.floats(0.0, 0.99),
+)
+@settings(max_examples=200, deadline=None)
+def test_eq1_bounds(gamma, alpha_frac, beta_frac):
+    """With beta <= alpha <= gamma, Eq. 1 lands in [0, 1]."""
+    beta = beta_frac * gamma
+    alpha = beta + alpha_frac * (gamma - beta)
+    s = congruence_score(alpha, gamma, beta)
+    assert -1e-9 <= s <= 1.0 + 1e-9
+
+
+@given(gamma=st.floats(1e-6, 1e3), beta_frac=st.floats(0.0, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_eq1_extremes(gamma, beta_frac):
+    beta = beta_frac * gamma
+    # idealization does nothing -> alpha == gamma -> score 0
+    assert congruence_score(gamma, gamma, beta) == pytest.approx(0.0)
+    # idealization reaches the target -> alpha == beta -> score 1
+    assert congruence_score(beta, gamma, beta) == pytest.approx(1.0)
+
+
+@given(
+    gamma=st.floats(1e-3, 1e3),
+    a1=st.floats(0.0, 1.0),
+    a2=st.floats(0.0, 1.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_eq1_monotone(gamma, a1, a2):
+    """Lower idealized delay => higher congruence score."""
+    beta = 0.0
+    lo, hi = sorted((a1 * gamma, a2 * gamma))
+    assert congruence_score(lo, gamma, beta) >= congruence_score(hi, gamma, beta)
+
+
+def test_eq1_degenerate():
+    assert congruence_score(1.0, 1.0, 1.0) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# profiling semantics
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize(
+    "dominant,profile",
+    [
+        (Subsystem.COMPUTE, make_profile(flops=1e15, hbm=1e6, coll=1e6)),
+        (Subsystem.MEMORY, make_profile(flops=1e9, hbm=1e12, coll=1e6)),
+        (Subsystem.INTERCONNECT, make_profile(flops=1e9, hbm=1e6, coll=1e12)),
+    ],
+)
+def test_dominant_subsystem_scores_highest(dominant, profile):
+    rep = profile_congruence(profile, TPU_V5E, beta=0.0)
+    names = {Subsystem.COMPUTE: "LBCS", Subsystem.MEMORY: "HRCS",
+             Subsystem.INTERCONNECT: "ICS"}
+    assert rep.dominant == names[dominant]
+    assert rep.scores[names[dominant]] > 0.9
+    others = [v for k, v in rep.scores.items() if k != names[dominant]]
+    assert all(v < 0.1 for v in others)
+
+
+@given(ratio=st.floats(2.0, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_score_grows_with_dominance(ratio):
+    """More dominant subsystem -> its score approaches 1 (paper claim 1)."""
+    base = make_profile(flops=1e9, hbm=1e6, coll=1e6)
+    dom = make_profile(flops=1e9 * ratio, hbm=1e6, coll=1e6)
+    s_base = profile_congruence(base, TPU_V5E, beta=0.0).scores["LBCS"]
+    s_dom = profile_congruence(dom, TPU_V5E, beta=0.0).scores["LBCS"]
+    assert s_dom >= s_base - 1e-9
+
+
+def test_bottleneck_shift():
+    """Fig. 2: improving the dominant subsystem migrates the bottleneck."""
+    profile = make_profile(flops=1e12, hbm=1e9, coll=1e10)  # ICS-dominated
+    rep = profile_congruence(profile, TPU_V5E, beta=0.0)
+    assert rep.dominant == "ICS"
+    # co-design response: 100x faster interconnect
+    better = TPU_V5E.with_scales(interconnect=0.01)
+    rep2 = profile_congruence(profile, better, beta=0.0)
+    assert rep2.dominant == "LBCS"
+
+
+def test_idealization_is_near_zero_not_zero():
+    m = TPU_V5E.idealized(Subsystem.COMPUTE)
+    assert m.scale_for(Subsystem.COMPUTE) == IDEAL_EPS
+    assert m.scale_for(Subsystem.MEMORY) == 1.0
+    p = make_profile()
+    t_full = step_time(p, TPU_V5E)
+    t_ideal = step_time(p, m)
+    assert 0 < t_ideal < t_full
+
+
+def test_alpha_never_exceeds_gamma():
+    p = make_profile(flops=3e12, hbm=2e10, coll=7e9)
+    rep = profile_congruence(p, TPU_V5E)
+    for alpha in rep.alphas.values():
+        assert alpha <= rep.gamma + 1e-12
+
+
+def test_extended_decomposition_sums_sensibly():
+    p = make_profile()
+    p.collective_bytes = {"all-reduce": 5e9, "all-gather": 5e9}
+    rep = profile_congruence(p, TPU_V5E, beta=0.0)
+    assert "ICS[all-reduce]" in rep.extended
+    assert "ICS[all-gather]" in rep.extended
+    # equal traffic -> equal sub-scores, each below the total ICS
+    assert rep.extended["ICS[all-reduce]"] == pytest.approx(
+        rep.extended["ICS[all-gather]"])
+    assert rep.extended["ICS[all-reduce]"] <= rep.scores["ICS"] + 1e-9
+    assert "LBCS[mxu]" in rep.extended or p.dot_flops == 0
+
+
+# --------------------------------------------------------------------------- #
+# aggregate + DSE (Table I analogue)
+# --------------------------------------------------------------------------- #
+
+
+def test_aggregate_is_l2_magnitude():
+    p = make_profile()
+    rep = profile_congruence(p, TPU_V5E)
+    want = math.sqrt(rep.ics ** 2 + rep.hrcs ** 2 + rep.lbcs ** 2)
+    assert rep.aggregate == pytest.approx(want)
+
+
+def test_dse_table_structure():
+    # mixed: densest balances the three terms best (smallest radar area)
+    apps = [
+        make_profile(name="mixed", flops=1e14, hbm=1e12, coll=5e9),
+        make_profile(name="coll-bound", flops=1e9, hbm=1e6, coll=1e12),
+    ]
+    suites = {"suiteA": ["mixed"], "suiteB": ["coll-bound"]}
+    table = evaluate(apps, suites=suites, beta=0.0)
+    assert set(table.variants) == {m.name for m in VARIANTS}
+    for app in ("mixed", "coll-bound"):
+        assert table.best_fit(app) in table.variants
+    # the balanced-at-densest app fits best on the densest variant
+    assert table.best_fit("mixed") == "densest"
+    md = table.markdown()
+    assert "best fit" in md and "aggregate" in md
+    radar = table.radar_markdown()
+    assert "ICS" in radar
+
+
+def test_dse_needs_no_recompilation():
+    """The whole sweep operates on frozen profiles (lightweight claim)."""
+    p = make_profile()
+    import time
+    t0 = time.perf_counter()
+    for _ in range(200):
+        evaluate([p])
+    dt = time.perf_counter() - t0
+    # 200 sweeps x 3 variants x 3 subsystems in well under a second each
+    assert dt < 10.0
+
+
+def test_timing_models_ordering():
+    p = make_profile(flops=1e12, hbm=1e10, coll=1e10)
+    tb = subsystem_times(p, TPU_V5E)
+    assert tb.total_overlap <= tb.total_serial
+    assert tb.total(("serial")) == tb.total_serial
+    with pytest.raises(ValueError):
+        tb.total("bogus")

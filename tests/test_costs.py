@@ -1,0 +1,107 @@
+"""HLO parsing: collective bytes, replica groups, pod crossing, dot FLOPs,
+TPU HBM-traffic model."""
+
+import pytest
+
+from repro.core.costs import (
+    WorkloadProfile,
+    _crosses_pod,
+    _parse_replica_groups,
+    parse_hlo_stats,
+)
+
+HLO = """
+HloModule jit_step
+
+%fused_computation.1 (param_0.1: f32[1024,1024]) -> f32[1024,1024] {
+  %param_0.1 = f32[1024,1024]{1,0} parameter(0)
+  ROOT %mul.1 = f32[1024,1024]{1,0} multiply(%param_0.1, %param_0.1)
+}
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.9 = f32[] add(%x, %y)
+}
+
+ENTRY %main (p0: f32[128,512], p1: f32[512,256]) -> f32[128,256] {
+  %p0 = f32[128,512]{1,0} parameter(0)
+  %p1 = f32[512,256]{1,0} parameter(1)
+  %fusion = f32[1024,1024]{1,0} fusion(f32[1024,1024]{1,0} %p0), kind=kLoop, calls=%fused_computation.1
+  %dot.1 = f32[128,256]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-gather.1 = f32[128,1024]{1,0} all-gather(f32[128,512]{1,0} %p0), replica_groups=[2,2]<=[4], dimensions={1}
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%dot.1), replica_groups={{0,1},{2,3}}, to_apply=%add.clone
+  %reduce-scatter.1 = f32[64,256]{1,0} reduce-scatter(f32[128,256]{1,0} %all-reduce.1), replica_groups=[1,4]<=[4], dimensions={0}, to_apply=%add.clone
+  %cp = f32[128,256]{1,0} collective-permute(%all-reduce.1), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  ROOT %out = f32[128,256]{1,0} add(%all-reduce.1, %cp)
+}
+"""
+
+
+def test_collective_bytes_by_kind():
+    stats = parse_hlo_stats(HLO)
+    f32 = 4
+    assert stats.collective_bytes["all-gather"] == 128 * 512 * f32  # operand
+    assert stats.collective_bytes["all-reduce"] == 128 * 256 * f32  # via symtab
+    assert stats.collective_bytes["reduce-scatter"] == 128 * 256 * f32
+    assert stats.collective_bytes["collective-permute"] == 128 * 256 * f32
+    assert stats.collective_counts["all-gather"] == 1
+
+
+def test_dot_flops_via_symbol_table():
+    stats = parse_hlo_stats(HLO)
+    assert stats.dot_flops == 2 * 128 * 256 * 512
+    assert stats.dot_count == 1
+
+
+def test_hbm_model_scoping():
+    """Fusion-body + nested-computation params must not be double counted."""
+    stats = parse_hlo_stats(HLO)
+    f32 = 4
+    # parameter: only ENTRY p0 + p1
+    params = (128 * 512 + 512 * 256) * f32
+    dot = (128 * 512 + 512 * 256 + 128 * 256) * f32
+    fusion = (1024 * 1024 + 1024 * 1024) * f32  # operand (inline) + result
+    colls = (128 * 512 + 128 * 256 * 3) * f32
+    assert stats.hbm_bytes == pytest.approx(params + dot + fusion + colls)
+
+
+def test_replica_group_parsing_iota():
+    groups = _parse_replica_groups("replica_groups=[2,4]<=[8]")
+    assert groups == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    groups = _parse_replica_groups("replica_groups=[4,2]<=[2,4]T(1,0)")
+    # arange(8).reshape(2,4).T.flatten() = [0,4,1,5,2,6,3,7] -> groups of 2
+    assert groups == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+
+def test_replica_group_parsing_explicit():
+    groups = _parse_replica_groups("replica_groups={{0,1},{2,3}}")
+    assert groups == [[0, 1], [2, 3]]
+
+
+def test_pod_crossing():
+    assert not _crosses_pod([[0, 1], [2, 3]], devices_per_pod=2)
+    assert _crosses_pod([[0, 2]], devices_per_pod=2)
+    assert _crosses_pod([[1, 2], [0, 3]], devices_per_pod=2)
+    # iota T-form groups [0,4],[1,5]... cross a 4-device pod
+    stats = parse_hlo_stats(
+        "ENTRY %m (p: f32[8]) -> f32[8] {\n"
+        "  %p = f32[8]{0} parameter(0)\n"
+        "  ROOT %ar = f32[8]{0} all-reduce(%p), replica_groups=[4,2]<=[2,4]T(1,0)\n"
+        "}\n",
+        devices_per_pod=4,
+    )
+    assert stats.pod_collective_bytes == 32.0
+
+
+def test_profile_json_roundtrip(tmp_path):
+    p = WorkloadProfile(name="x", flops=1.0, bytes_accessed=2.0,
+                        collective_bytes={"all-reduce": 3.0},
+                        hbm_bytes=5.0, model_flops=4.0, num_devices=8)
+    path = str(tmp_path / "p.json")
+    p.save(path)
+    q = WorkloadProfile.load(path)
+    assert q.flops == p.flops
+    assert q.hbm_bytes == p.hbm_bytes
+    assert q.collective_bytes == p.collective_bytes
+    assert q.useful_flops_ratio == p.useful_flops_ratio

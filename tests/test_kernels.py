@@ -1,0 +1,142 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol_for(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+FA_SHAPES = [
+    # (B, H, K, S, T, D)
+    (1, 4, 4, 128, 128, 64),     # MHA square
+    (2, 8, 2, 128, 128, 32),     # GQA
+    (1, 4, 1, 256, 256, 64),     # MQA
+    (1, 2, 2, 64, 256, 32),      # cross-length (S != T)
+]
+
+
+@pytest.mark.parametrize("shape", FA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_attention_sweep(shape, dtype, causal, window):
+    B, H, K, S, T, D = shape
+    if causal and S != T:
+        pytest.skip("causal with S != T not a supported layout")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), dtype)
+    k = jax.random.normal(ks[1], (B, K, T, D), dtype)
+    v = jax.random.normal(ks[2], (B, K, T, D), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_kv=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+def test_flash_attention_blocks_invariance():
+    B, H, K, S, D = 1, 2, 2, 256, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, K, S, D))
+    v = jax.random.normal(ks[2], (B, K, S, D))
+    outs = [
+        ops.flash_attention(q, k, v, block_q=bq, block_kv=bkv, interpret=True)
+        for bq, bkv in [(64, 64), (128, 64), (64, 128), (256, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# rmsnorm
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("rows,d", [(8, 128), (37, 256), (256, 512), (1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(rows, d, dtype):
+    x = jax.random.normal(KEY, (rows, d), dtype)
+    sc = jax.random.normal(jax.random.PRNGKey(1), (d,)) + 1.0
+    got = ops.rmsnorm(x, sc, interpret=True)
+    want = ref.rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+def test_rmsnorm_residual():
+    x = jax.random.normal(KEY, (16, 9, 128))
+    r = jax.random.normal(jax.random.PRNGKey(1), x.shape)
+    sc = jnp.ones((128,))
+    g1, g2 = ops.rmsnorm_residual(x, r, sc, interpret=True)
+    w1, w2 = ref.rmsnorm_residual_ref(x, r, sc)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(w1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(w2), atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# selective scan
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,S,Din,N,chunk,dblk", [
+    (1, 32, 64, 4, 8, 32),
+    (2, 64, 128, 8, 16, 64),
+    (2, 64, 128, 8, 64, 128),    # single chunk / single block
+    (1, 48, 96, 16, 16, 96),     # odd-ish sizes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_selective_scan_sweep(B, S, Din, N, chunk, dblk, dtype):
+    ks = jax.random.split(KEY, 4)
+    xi = (jax.random.normal(ks[0], (B, S, Din)) * 0.5).astype(dtype)
+    dt_raw = (jax.random.normal(ks[1], (B, S, Din)) * 0.5 - 1.0).astype(dtype)
+    Bm = (jax.random.normal(ks[2], (B, S, N)) * 0.3).astype(dtype)
+    Cm = (jax.random.normal(ks[3], (B, S, N)) * 0.3).astype(dtype)
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (Din, N)) * 0.3)
+    y_got, h_got = ops.selective_scan(xi, dt_raw, Bm, Cm, A, chunk=chunk,
+                                      d_block=dblk, interpret=True)
+    y_want, h_want = ref.selective_scan_ref(xi, dt_raw, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(y_got, np.float32),
+                               np.asarray(y_want, np.float32),
+                               atol=tol_for(dtype), rtol=tol_for(dtype))
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               atol=tol_for(dtype), rtol=tol_for(dtype))
+
+
+def test_selective_scan_carries_state():
+    """Scanning two halves with carried state == scanning the whole."""
+    B, S, Din, N = 1, 32, 64, 4
+    ks = jax.random.split(KEY, 4)
+    xi = jax.random.normal(ks[0], (B, S, Din)) * 0.5
+    dt_raw = jax.random.normal(ks[1], (B, S, Din)) * 0.5 - 1.0
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.3
+    Cm = jax.random.normal(ks[3], (B, S, N)) * 0.3
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (Din, N)) * 0.3)
+    y_full, h_full = ops.selective_scan(xi, dt_raw, Bm, Cm, A, chunk=8,
+                                        d_block=32, interpret=True)
+    half = S // 2
+    y1, h1 = ops.selective_scan(xi[:, :half], dt_raw[:, :half], Bm[:, :half],
+                                Cm[:, :half], A, chunk=8, d_block=32,
+                                interpret=True)
+    y2, h2 = ops.selective_scan(xi[:, half:], dt_raw[:, half:], Bm[:, half:],
+                                Cm[:, half:], A, h1, chunk=8, d_block=32,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(y_full[:, half:]), np.asarray(y2),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2),
+                               atol=1e-5, rtol=1e-5)

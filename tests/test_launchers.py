@@ -1,0 +1,26 @@
+"""Launcher entry points run end-to-end on CPU (smoke scale)."""
+
+import shutil
+
+from repro.launch import serve as serve_launch
+from repro.launch import train as train_launch
+
+
+def test_train_launcher(tmp_path):
+    shutil.rmtree("/tmp/repro_launch_train_test", ignore_errors=True)
+    rc = train_launch.main([
+        "--arch", "chatglm3-6b", "--smoke", "--steps", "6",
+        "--seq-len", "32", "--batch", "2",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "3",
+    ])
+    assert rc == 0
+    from repro.checkpoint import store
+    assert store.latest_step(str(tmp_path)) == 6
+
+
+def test_serve_launcher():
+    rc = serve_launch.main([
+        "--arch", "falcon-mamba-7b", "--smoke", "--requests", "2",
+        "--slots", "2", "--new-tokens", "3", "--max-len", "32",
+    ])
+    assert rc == 0

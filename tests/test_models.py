@@ -1,0 +1,195 @@
+"""Model zoo behaviour: forward/loss, decode==forward equivalence, chunked
+attention, pallas attention, feature flags."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.config import (
+    Family,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+
+KEY = jax.random.PRNGKey(1)
+
+
+def dense_cfg(**kw):
+    base = dict(name="dense", family=Family.DENSE, n_layers=3, d_model=32,
+                n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                remat="none", compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+ALL_CFGS = {
+    "dense": dense_cfg(),
+    "dense-qk-bias-halfrope": dense_cfg(
+        name="dq", qk_norm=True, qkv_bias=True, rope_style="half"),
+    "moe": ModelConfig(
+        name="moe", family=Family.MOE, n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=0, vocab_size=64, remat="none",
+        compute_dtype="float32",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=48,
+                      n_shared_experts=2, d_ff_shared=16)),
+    "ssm": ModelConfig(
+        name="ssm", family=Family.SSM, n_layers=2, d_model=32, n_heads=1,
+        n_kv_heads=1, d_ff=0, vocab_size=64, remat="none", rope_style="none",
+        compute_dtype="float32", ssm=SSMConfig(state_dim=4)),
+    "hybrid": ModelConfig(
+        name="hyb", family=Family.HYBRID, n_layers=5, d_model=32, n_heads=4,
+        n_kv_heads=1, d_ff=64, vocab_size=64, remat="none", attn_window=6,
+        compute_dtype="float32", hybrid=HybridConfig(lru_width=32)),
+    "audio": ModelConfig(
+        name="aud", family=Family.AUDIO, n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab_size=64, remat="none", rope_style="none",
+        norm="layernorm", mlp="gelu", compute_dtype="float32",
+        n_encoder_layers=2, encoder_seq_len=8, decoder_pos_len=32),
+    "vlm": ModelConfig(
+        name="vlm", family=Family.VLM, n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=1, d_ff=64, vocab_size=64, remat="none",
+        compute_dtype="float32", n_vision_tokens=4, tie_embeddings=True),
+}
+
+
+def make_batch(cfg, B=2, S=12, key=jax.random.PRNGKey(2)):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == Family.AUDIO:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.encoder_seq_len, cfg.d_model))
+    if cfg.family == Family.VLM:
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(4), (B, cfg.n_vision_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", list(ALL_CFGS))
+def test_forward_loss_finite(name):
+    cfg = ALL_CFGS[name]
+    params, axes = T.init_model(KEY, cfg)
+    batch = make_batch(cfg)
+    loss, metrics = T.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss)
+    assert 0 <= float(metrics["accuracy"]) <= 1
+    # axes mirror params
+    jax.tree.map(lambda p, a: None, params, axes)
+
+
+@pytest.mark.parametrize("name", list(ALL_CFGS))
+def test_decode_matches_forward(name):
+    cfg = ALL_CFGS[name]
+    params, _ = T.init_model(KEY, cfg)
+    B, S = 2, 12
+    batch = make_batch(cfg, B, S)
+    hidden, _ = T.forward(params, cfg, batch)
+    full_logits = L.unembed_apply(params["embed"], cfg, hidden)
+
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, : S - 1]
+    pre["labels"] = pre["tokens"]
+    cache, _ = T.init_cache(cfg, B, S)
+    cache, _ = T.prefill(params, cfg, pre, cache)
+    _, dec_logits = T.decode_step(
+        params, cfg, cache, batch["tokens"][:, S - 1: S], jnp.int32(S - 1))
+    want, got = full_logits[:, -1], dec_logits[:, 0]
+    err = float(jnp.max(jnp.abs(want - got))
+                / (jnp.max(jnp.abs(want)) + 1e-6))
+    assert err < 1e-4, f"{name}: decode mismatch {err}"
+
+
+def test_chunked_attention_equivalence():
+    cfg = ALL_CFGS["dense"]
+    params, _ = T.init_model(KEY, cfg)
+    batch = make_batch(cfg, 2, 16)
+    h1, _ = T.forward(params, cfg, batch)
+    h2, _ = T.forward(params, cfg.replace(attn_q_chunk=4), batch)
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-5
+
+
+def test_pallas_attention_equivalence():
+    cfg = ALL_CFGS["dense"]
+    params, _ = T.init_model(KEY, cfg)
+    batch = make_batch(cfg, 2, 32)
+    h1, _ = T.forward(params, cfg, batch)
+    h2, _ = T.forward(params, cfg.replace(attn_impl="pallas"), batch)
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-4
+
+
+def test_logits_chunk_equivalence():
+    cfg = ALL_CFGS["dense"]
+    params, _ = T.init_model(KEY, cfg)
+    batch = make_batch(cfg, 2, 16)
+    l1, _ = T.loss_fn(params, cfg, batch)
+    l2, _ = T.loss_fn(params, cfg.replace(logits_chunk=4), batch)
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+
+
+def test_grad_flows_everywhere():
+    cfg = ALL_CFGS["dense"]
+    params, _ = T.init_model(KEY, cfg)
+    batch = make_batch(cfg)
+    grads = jax.grad(lambda p: T.loss_fn(p, cfg, batch)[0])(params)
+    norms = [float(jnp.linalg.norm(g)) for g in jax.tree.leaves(grads)]
+    assert all(jnp.isfinite(n) for n in norms)
+    assert sum(1 for n in norms if n > 0) > len(norms) * 0.9
+
+
+def test_sliding_window_masks_history():
+    """Token attends to at most `window` positions."""
+    cfg = dense_cfg(name="w", n_layers=1, attn_window=4)
+    params, _ = T.init_model(KEY, cfg)
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    h1, _ = T.forward(params, cfg, batch)
+    # perturbing a token outside every later window must not change outputs
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    h2, _ = T.forward(params, cfg, {"tokens": toks2, "labels": toks2})
+    # positions >= 4 can't see position 0
+    assert float(jnp.max(jnp.abs(h1[0, 4:] - h2[0, 4:]))) < 1e-5
+    # position 0 itself obviously changes
+    assert float(jnp.max(jnp.abs(h1[0, 0] - h2[0, 0]))) > 1e-6
+
+
+def test_moe_dense_vs_gmm_impl():
+    import dataclasses
+    cfg = ALL_CFGS["moe"]
+    params, _ = T.init_model(KEY, cfg)
+    batch = make_batch(cfg)
+    h1, _ = T.forward(params, cfg, batch)
+    cfg2 = cfg.replace(moe=dataclasses.replace(cfg.moe, impl="dense"))
+    h2, _ = T.forward(params, cfg2, batch)
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-4
+
+
+def test_vlm_prefix_is_bidirectional():
+    """Text token changes must not affect... vision positions are dropped,
+    but a LATER vision patch must influence EARLIER text (prefix-LM)."""
+    cfg = ALL_CFGS["vlm"]
+    params, _ = T.init_model(KEY, cfg)
+    batch = make_batch(cfg, 1, 8)
+    h1, _ = T.forward(params, cfg, batch)
+    patches2 = batch["patches"].at[0, -1].add(1.0)
+    b2 = dict(batch, patches=patches2)
+    h2, _ = T.forward(params, cfg, b2)
+    # all text positions see all vision tokens
+    assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-6
+
+
+def test_param_counts_match_instantiated():
+    from repro.configs import SMOKE_REGISTRY
+    for name, cfg in SMOKE_REGISTRY.items():
+        params, _ = T.init_model(KEY, cfg)
+        actual = sum(p.size for p in jax.tree.leaves(params))
+        total, _ = cfg.param_counts()
+        extra = cfg.decoder_pos_len * cfg.d_model \
+            + (cfg.encoder_seq_len * cfg.d_model
+               if cfg.family == Family.AUDIO else 0)
+        # analytic count covers >= 95% (frontends/pos tables are extra)
+        assert abs(actual - total) <= 0.08 * actual + extra + 4 * cfg.d_model, (
+            name, actual, total)

@@ -1,0 +1,224 @@
+"""Substrate tests: data pipeline, optimizer, checkpointing, fault-tolerant
+trainer, serving engine, sharding rules."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, PrefetchIterator, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.serving.engine import BatchedEngine, Request
+from repro.training.trainer import FailureInjector, Trainer, TrainerConfig
+
+CFG = get_config("chatglm3-6b", smoke=True)
+
+
+# --------------------------------------------------------------------------- #
+# data
+# --------------------------------------------------------------------------- #
+
+
+def test_data_deterministic():
+    dc = DataConfig(seq_len=16, global_batch=4, seed=3)
+    a = SyntheticLM(CFG, dc).batch(7)
+    b = SyntheticLM(CFG, dc).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticLM(CFG, dc).batch(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    dc0 = DataConfig(seq_len=16, global_batch=8, host_index=0, host_count=2)
+    dc1 = DataConfig(seq_len=16, global_batch=8, host_index=1, host_count=2)
+    b0 = SyntheticLM(CFG, dc0).batch(0)
+    b1 = SyntheticLM(CFG, dc1).batch(0)
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_data_labels_shift():
+    dc = DataConfig(seq_len=16, global_batch=2)
+    src = SyntheticLM(CFG, dc)
+    b = src.batch(0)
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_prefetch_iterator():
+    dc = DataConfig(seq_len=8, global_batch=2)
+    src = SyntheticLM(CFG, dc)
+    it = PrefetchIterator(src, start_step=5)
+    step, batch = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(batch["tokens"], src.batch(5)["tokens"])
+    step, _ = next(it)
+    assert step == 6
+    it.close()
+
+
+# --------------------------------------------------------------------------- #
+# optimizer
+# --------------------------------------------------------------------------- #
+
+
+def test_adamw_converges_quadratic():
+    oc = adamw.OptimizerConfig(peak_lr=0.1, warmup_steps=0, total_steps=200,
+                               weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw.init(params, oc)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw of w^2
+        params, state, _ = adamw.update(grads, state, params, oc)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_adamw_clip():
+    oc = adamw.OptimizerConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(3)}
+    state = adamw.init(params, oc)
+    _, _, stats = adamw.update({"w": jnp.full(3, 1e6)}, state, params, oc)
+    assert float(stats["grad_norm"]) > 1e5  # raw norm reported
+
+
+def test_schedule_shape():
+    oc = adamw.OptimizerConfig(peak_lr=1.0, warmup_steps=10, total_steps=100,
+                               min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(jnp.int32(s), oc)) for s in range(101)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert lrs[10] == pytest.approx(1.0, abs=1e-3)
+    assert lrs[100] == pytest.approx(0.1, abs=1e-3)
+
+
+def test_grad_compression_error_feedback():
+    oc = adamw.OptimizerConfig(compress_grads=True, warmup_steps=0)
+    params = {"w": jnp.zeros(8)}
+    state = adamw.init(params, oc)
+    assert "ef" in state
+    g = {"w": jnp.array([1.0, 1e-4, 0.5, -0.3, 0.0, 2.0, -1.7, 0.2])}
+    _, state2, _ = adamw.update(g, state, params, oc)
+    # residual captures quantization error; bounded by one quantum
+    quantum = 2.0 / 127.0
+    assert float(jnp.max(jnp.abs(state2["ef"]["w"]))) <= quantum + 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing
+# --------------------------------------------------------------------------- #
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16), "d": jnp.int32(7)}}
+    store.save(str(tmp_path), 3, tree, extra={"loss": 1.5})
+    restored, extra = store.restore(str(tmp_path), tree)
+    assert extra["step"] == 3 and extra["loss"] == 1.5
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x, np.float32), np.asarray(y, np.float32)),
+        tree, restored)
+
+
+def test_checkpoint_atomicity(tmp_path):
+    tree = {"a": jnp.ones(3)}
+    store.save(str(tmp_path), 1, tree)
+    # a stale tmp dir (simulated crash) must be invisible
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert store.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_retain(tmp_path):
+    tree = {"a": jnp.ones(2)}
+    for s in (1, 2, 3, 4, 5):
+        store.save(str(tmp_path), s, tree)
+    store.retain(str(tmp_path), keep=2)
+    assert store.latest_step(str(tmp_path)) == 5
+    assert len([d for d in os.listdir(tmp_path) if d.startswith("step_")]) == 2
+
+
+def test_async_checkpointer(tmp_path):
+    ck = store.AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save(10, {"w": jnp.ones(5)})
+    ck.wait()
+    assert store.latest_step(str(tmp_path)) == 10
+
+
+# --------------------------------------------------------------------------- #
+# fault-tolerant trainer
+# --------------------------------------------------------------------------- #
+
+
+def test_trainer_restart_from_failure(tmp_path):
+    tc = TrainerConfig(total_steps=12, checkpoint_every=4,
+                       checkpoint_dir=str(tmp_path), max_restarts=2,
+                       log_every=100)
+    dc = DataConfig(seq_len=16, global_batch=2)
+    tr = Trainer(CFG, tc, dc, failure_injector=FailureInjector(fail_at=[6]))
+    out = tr.run()
+    assert out["steps"] == 12
+    assert out["restarts"] == 1
+    assert store.latest_step(str(tmp_path)) == 12
+
+
+def test_trainer_gives_up_after_max_restarts(tmp_path):
+    tc = TrainerConfig(total_steps=10, checkpoint_every=100,
+                       checkpoint_dir=str(tmp_path), max_restarts=1,
+                       log_every=100)
+    dc = DataConfig(seq_len=16, global_batch=2)
+    # no checkpoint before the failure -> restart hits it again
+    tr = Trainer(CFG, tc, dc, failure_injector=FailureInjector(fail_at=[2, 2]))
+    tr.failure_injector.fired = set()
+
+    class AlwaysFail(FailureInjector):
+        def maybe_fail(self, step):
+            if step == 2:
+                raise RuntimeError("boom")
+
+    tr.failure_injector = AlwaysFail()
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        tr.run()
+
+
+def test_straggler_detection(tmp_path):
+    tc = TrainerConfig(total_steps=1, checkpoint_dir=str(tmp_path),
+                       straggler_factor=2.0, ewma_alpha=0.5)
+    dc = DataConfig(seq_len=8, global_batch=2)
+    events = []
+    tr = Trainer(CFG, tc, dc,
+                 on_straggler=lambda s, dt, ewma: events.append((s, dt)))
+    tr._track_step_time(0, 1.0)   # seeds ewma
+    tr._track_step_time(1, 1.1)
+    tr._track_step_time(2, 5.0)   # 5x ewma -> straggler
+    assert tr.stragglers.count == 1
+    assert events and events[0][0] == 2
+
+
+# --------------------------------------------------------------------------- #
+# serving engine
+# --------------------------------------------------------------------------- #
+
+
+def test_batched_engine_slots_recycle():
+    cfg = CFG.replace(vocab_size=32)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = BatchedEngine(params, cfg, slots=2, max_len=16)
+    for rid in range(4):  # more requests than slots
+        eng.submit(Request(rid=rid, prompt=[1, 2, 3], max_new_tokens=3))
+    eng.run_to_completion(max_steps=200)
+    assert not eng.active and not eng.queue
+    assert len(eng.free) == 2
+
+
+def test_engine_greedy_matches_decode():
+    cfg = CFG.replace(vocab_size=32)
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = BatchedEngine(params, cfg, slots=1, max_len=16)
+    req = Request(rid=0, prompt=[5, 7], max_new_tokens=2)
+    eng.submit(req)
+    eng.run_to_completion(max_steps=50)
+    assert len(req.generated) >= 2
+    assert all(0 <= t < cfg.vocab_size for t in req.generated)

@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Full pipeline on CPU: compile a real (smoke-size) train step, extract the
+workload profile from the compiled artifact, compute congruence scores,
+run the DSE sweep, and check the decisions are self-consistent -- the
+complete paper flow (compile-once -> profile -> Eq.1 scores -> Table I).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    TPU_V5E,
+    analyze,
+    evaluate,
+    profile_congruence,
+    profile_from_compiled,
+)
+from repro.optim import adamw
+from repro.training.step import init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def compiled_profile():
+    cfg = get_config("chatglm3-6b", smoke=True)
+    oc = adamw.OptimizerConfig(warmup_steps=1, total_steps=10)
+    state, _ = init_state(jax.random.PRNGKey(0), cfg, oc)
+    batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+             "labels": jnp.zeros((4, 64), jnp.int32)}
+    compiled = jax.jit(make_train_step(cfg, oc)).lower(state, batch).compile()
+    total, active = cfg.param_counts()
+    return profile_from_compiled(
+        "e2e", compiled, num_devices=1,
+        model_flops=6 * active * batch["tokens"].size,
+        tokens=batch["tokens"].size, params=total, params_active=active)
+
+
+def test_profile_extraction_sane(compiled_profile):
+    p = compiled_profile
+    assert p.flops > 0
+    assert p.hbm_bytes > 0
+    assert p.dot_count > 0
+    # single device: no collectives
+    assert p.total_collective_bytes == 0
+
+
+def test_congruence_full_pipeline(compiled_profile):
+    rep = profile_congruence(compiled_profile, TPU_V5E)
+    assert set(rep.scores) == {"ICS", "HRCS", "LBCS"}
+    # single-device artifact: interconnect can't be the bottleneck
+    assert rep.dominant in ("HRCS", "LBCS")
+    assert rep.scores["ICS"] == pytest.approx(0.0, abs=1e-6)
+    assert rep.gamma > rep.beta >= 0
+
+
+def test_roofline_full_pipeline(compiled_profile):
+    rl = analyze(compiled_profile, TPU_V5E)
+    assert rl.compute_s > 0 and rl.memory_s > 0
+    assert rl.collective_s == 0
+    assert rl.dominant in ("compute", "memory")
+    assert 0 < rl.useful_ratio < 10
+
+
+def test_dse_full_pipeline(compiled_profile):
+    table = evaluate([compiled_profile])
+    assert table.best_fit("e2e") in ("baseline", "denser", "densest")
+    md = table.markdown()
+    assert "e2e" in md
+
+
+def test_idealization_consistency(compiled_profile):
+    """Idealizing every subsystem jointly reaches ~the ideal step time."""
+    from repro.core import ALL_SUBSYSTEMS, step_time
+    m = TPU_V5E
+    for s in ALL_SUBSYSTEMS:
+        m = m.idealized(s)
+    t_all_ideal = step_time(compiled_profile, m)
+    t_base = step_time(compiled_profile, TPU_V5E)
+    assert t_all_ideal < 0.01 * t_base
