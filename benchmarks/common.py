@@ -18,6 +18,10 @@ from repro.core import WorkloadProfile
 ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 
+# Smoke mode (run.py --smoke): tiny synthetic profiles, single repeat, small
+# sweep populations -- CI exercises every benchmark function in seconds.
+SMOKE = False
+
 # Two-suite split for Table I / Fig. 3 analogues (DESIGN.md §2):
 # dense transformers (Koios-like homogeneous compute) vs structured archs.
 DENSE_SUITE = ("chatglm3-6b", "qwen3-32b", "qwen1.5-4b", "deepseek-67b")
@@ -52,7 +56,28 @@ def synthetic_profiles() -> List[WorkloadProfile]:
     return out
 
 
+def scaling_profiles(n: int) -> List[WorkloadProfile]:
+    """``n`` deterministic synthetic apps spanning the bottleneck spectrum
+    (used by the sweep_scaling benchmark and smoke runs)."""
+    out = []
+    for i in range(n):
+        # Rotate dominance between compute / memory / interconnect while
+        # varying magnitudes so no two apps score identically.
+        f = 1e12 * (10.0 ** (i % 3)) * (1.0 + 0.13 * i)
+        h = 1e9 * (10.0 ** ((i + 1) % 3)) * (1.0 + 0.07 * i)
+        c = 1e9 * (10.0 ** ((i + 2) % 3)) * (1.0 + 0.11 * i)
+        out.append(WorkloadProfile(
+            name=f"scale-{i:03d}", arch=f"scale-{i:03d}", shape="train_4k",
+            mesh="pod16x16", flops=f, bytes_accessed=h, hbm_bytes=h,
+            collective_bytes={"all-reduce": c},
+            pod_collective_bytes=0.25 * c if i % 4 == 0 else 0.0,
+            num_devices=256, model_flops=f * 0.7 * 256, tokens=1 << 20))
+    return out
+
+
 def profiles_or_synthetic(mesh: str = "pod16x16"):
+    if SMOKE:
+        return synthetic_profiles(), True
     profs = load_profiles(mesh)
     if profs:
         return profs, False
@@ -70,6 +95,8 @@ def suites_of(profiles) -> Dict[str, List[str]]:
 
 
 def timeit(fn: Callable, *args, repeat: int = 5, **kw) -> Tuple[float, object]:
+    if SMOKE:
+        repeat = 1
     fn(*args, **kw)  # warm
     t0 = time.perf_counter()
     for _ in range(repeat):

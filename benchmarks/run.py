@@ -13,14 +13,22 @@ tables to benchmarks/out/ (consumed by EXPERIMENTS.md).
   profiler_overhead    -- paper's "lightweight" claim: congruence scoring
                           reuses the compiled artifact; measured speedup vs
                           the compile it avoids.
+  sweep_scaling        -- vectorized sweep-engine throughput (cells/second)
+                          at V in {3, 100, 1k, 10k} generated variants, plus
+                          the batched-vs-scalar speedup on 10 x 1k cells.
+
+``--smoke`` runs every benchmark on tiny synthetic inputs with a single
+repeat so CI can exercise the whole harness in seconds.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 
 from benchmarks import common
 from repro.core import (
+    ParamSpace,
     TPU_V5E,
     VARIANTS,
     analyze,
@@ -162,13 +170,69 @@ def perf_hillclimb() -> None:
         for n, t, r in rows))
 
 
-def main() -> None:
+def sweep_scaling() -> None:
+    """Tentpole scaling claim: batched DSE throughput at population scale.
+
+    Times ``evaluate(method="batched")`` over 10 apps x V generated variants
+    for V in {3, 100, 1k, 10k} (cells/second), then the batched-vs-scalar
+    speedup at V=1000 -- the ISSUE's >=50x acceptance gate.
+    """
+    profiles = common.scaling_profiles(10)
+    space = ParamSpace.default()
+    sizes = (3, 50) if common.SMOKE else (3, 100, 1000, 10000)
+    rows = []
+    for v in sizes:
+        machines = space.sample(v, seed=0)
+        us, table = common.timeit(
+            evaluate, profiles, variants=machines, method="batched",
+            repeat=1 if v >= 1000 else 3)
+        cells = len(profiles) * v
+        cells_per_s = cells / (us / 1e6)
+        common.emit(f"sweep/batched/V{v}", us / cells,
+                    f"cells={cells} cells_per_s={cells_per_s:.0f} "
+                    f"best={table.overall_best_fit()}")
+        rows.append((v, cells, cells_per_s))
+
+    v_cmp = 50 if common.SMOKE else 1000
+    machines = space.sample(v_cmp, seed=0)
+    us_b, table_b = common.timeit(
+        evaluate, profiles, variants=machines, method="batched", repeat=1)
+    us_s, _ = common.timeit(
+        evaluate, profiles, variants=machines, method="scalar", repeat=1)
+    speedup = us_s / max(us_b, 1e-9)
+    common.emit("sweep/speedup", us_b / (len(profiles) * v_cmp),
+                f"batched_s={us_b / 1e6:.4f} scalar_s={us_s / 1e6:.3f} "
+                f"speedup={speedup:.0f}x at V={v_cmp}")
+
+    res = table_b.result
+    md = ["| V | cells | cells/s |", "|---|---|---|"]
+    md += [f"| {v} | {c} | {r:.0f} |" for v, c, r in rows]
+    md += ["", f"batched vs scalar at V={v_cmp}: {speedup:.0f}x", "",
+           res.markdown(top_k=10)]
+    common.write_out("sweep_scaling.md", "\n".join(md))
+
+
+BENCHMARKS = {
+    "table1_congruence": table1_congruence,
+    "fig3_radar": fig3_radar,
+    "roofline_table": roofline_table,
+    "profiler_overhead": profiler_overhead,
+    "perf_hillclimb": perf_hillclimb,
+    "sweep_scaling": sweep_scaling,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic profiles, single repeat (CI mode)")
+    ap.add_argument("benchmarks", nargs="*", choices=[[], *BENCHMARKS],
+                    help="subset to run (default: all)")
+    args = ap.parse_args(argv)
+    common.SMOKE = args.smoke
     print("name,us_per_call,derived")
-    table1_congruence()
-    fig3_radar()
-    roofline_table()
-    profiler_overhead()
-    perf_hillclimb()
+    for name in (args.benchmarks or BENCHMARKS):
+        BENCHMARKS[name]()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,96 @@
+"""Design-space sweep CLI -- score machine populations against profiles.
+
+Generates a machine-variant population (grid or low-discrepancy random) from
+``repro.core.sweep.ParamSpace``, scores every (app x variant) cell with the
+batched congruence engine, and dumps the best-fit variants + Pareto front
+(aggregate congruence vs. area proxy) as JSON and/or markdown.
+
+  PYTHONPATH=src:. python scripts/sweep.py --num 2048 --out sweep
+  PYTHONPATH=src:. python scripts/sweep.py --mode grid --num 1024 \
+      --format md --timing-model overlap
+
+Profiles come from ``benchmarks/artifacts/*.json`` (the dry-run outputs)
+when present, else the synthetic trio -- same policy as the benchmark
+harness.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks import common  # noqa: E402
+from repro.core.machine import TPU_V5E, VARIANTS  # noqa: E402
+from repro.core.sweep import ParamSpace, run_sweep  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="artifact mesh filter ('' = all meshes)")
+    ap.add_argument("--mode", choices=("random", "grid"), default="random")
+    ap.add_argument("--num", type=int, default=1024,
+                    help="population size (grid rounds up per-dim)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--span", type=float, default=4.0,
+                    help="sweep each rate this many x below/above nominal")
+    ap.add_argument("--max-links", type=int, default=8)
+    ap.add_argument("--beta", type=float, default=None,
+                    help="explicit target step time (s); default: per-app "
+                         "ideal-compute beta against the baseline variant")
+    ap.add_argument("--timing-model", choices=("serial", "overlap"),
+                    default="serial")
+    ap.add_argument("--no-named", action="store_true",
+                    help="do not prepend baseline/denser/densest")
+    ap.add_argument("--top", type=int, default=16)
+    ap.add_argument("--format", choices=("json", "md", "both"), default="both")
+    ap.add_argument("--out", default=None,
+                    help="output path stem (default: stdout); writes "
+                         "<out>.json / <out>.md per --format")
+    args = ap.parse_args(argv)
+    if args.num < 1:
+        ap.error("--num must be >= 1")
+
+    profiles, synthetic = common.profiles_or_synthetic(args.mesh)
+    space = ParamSpace.default(nominal=TPU_V5E, span=args.span,
+                               max_links=args.max_links)
+    result = run_sweep(
+        profiles,
+        space=space,
+        n=args.num,
+        mode=args.mode,
+        seed=args.seed,
+        include_named=() if args.no_named else VARIANTS,
+        beta=args.beta,
+        timing_model=args.timing_model,
+    )
+
+    print(f"swept {len(result.profiles)} apps x {len(result.machines)} "
+          f"variants{' (SYNTHETIC profiles)' if synthetic else ''}; "
+          f"pareto front: {len(result.pareto_front())} variants",
+          file=sys.stderr)
+
+    blob = json.dumps(result.to_json(top_k=args.top), indent=1, sort_keys=True)
+    md = result.markdown(top_k=args.top)
+    if args.out is None:
+        if args.format in ("json", "both"):
+            print(blob)
+        if args.format in ("md", "both"):
+            print(md)
+    else:
+        if args.format in ("json", "both"):
+            with open(args.out + ".json", "w") as f:
+                f.write(blob + "\n")
+        if args.format in ("md", "both"):
+            with open(args.out + ".md", "w") as f:
+                f.write(md + "\n")
+        print(f"wrote {args.out}.{{json,md}}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,7 @@ Public API:
   congruence_score / profile_congruence    -- Eq. 1 + ICS/HRCS/LBCS reports
   roofline.analyze                         -- three-term roofline reports
   dse.evaluate                             -- Table I-style variant sweeps
+  sweep.ParamSpace / batched_congruence    -- vectorized population sweeps
 """
 
 from repro.core.congruence import (
@@ -23,7 +24,7 @@ from repro.core.costs import (
     parse_hlo_stats,
     profile_from_compiled,
 )
-from repro.core.dse import DseCell, DseTable, evaluate
+from repro.core.dse import DseCell, DseTable, LazyDseTable, evaluate
 from repro.core.machine import (
     ALL_SUBSYSTEMS,
     IDEAL_EPS,
@@ -37,4 +38,14 @@ from repro.core.machine import (
     get_variant,
 )
 from repro.core.roofline import RooflineReport, analyze, markdown_table, model_flops_for
+from repro.core.sweep import (
+    Dim,
+    MachineBatch,
+    ParamSpace,
+    ProfileBatch,
+    SweepResult,
+    batched_congruence,
+    batched_step_time,
+    run_sweep,
+)
 from repro.core.timing import TimingBreakdown, step_time, subsystem_times

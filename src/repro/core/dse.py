@@ -1,21 +1,38 @@
 """Design-space exploration over machine variants (paper §III, Table I).
 
 Given a set of workload profiles (applications) and machine variants
-(baseline / denser / densest), compute the aggregate congruence score for
-every (application, variant) pair, pick each application's best-fit variant
-(lowest aggregate = smallest radar area = best alignment), and report suite
-means -- reproducing the structure of the paper's Table I and Fig. 3 on our
-TPU workloads.
+(baseline / denser / densest, or thousands of generated designs), compute the
+aggregate congruence score for every (application, variant) pair, pick each
+application's best-fit variant (lowest aggregate = smallest radar area = best
+alignment), and report suite means -- reproducing the structure of the
+paper's Table I and Fig. 3 on our TPU workloads.
+
+Two execution paths share one table interface:
+
+  * ``method="batched"`` (default) delegates the whole cross-product to the
+    vectorized kernels in ``repro.core.sweep`` and returns a
+    ``LazyDseTable`` that materializes full ``DseCell`` reports only for
+    the cells a caller actually asks for -- the fast path that makes
+    1000-variant sweeps as cheap as the paper's 3-variant Table I.
+  * ``method="scalar"`` is the original per-cell reference loop, kept as the
+    equivalence oracle (tests assert batched == scalar to ~1e-9).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.congruence import CongruenceReport, profile_congruence
+from repro.core.congruence import (
+    CongruenceReport,
+    SCORE_NAMES,
+    default_beta,
+    extended_decomposition,
+    profile_congruence,
+)
 from repro.core.costs import WorkloadProfile
-from repro.core.machine import MachineModel, VARIANTS
+from repro.core.machine import ALL_SUBSYSTEMS, VARIANTS
+from repro.core.timing import subsystem_times
 
 
 @dataclasses.dataclass
@@ -27,6 +44,59 @@ class DseCell:
     @property
     def aggregate(self) -> float:
         return self.report.aggregate
+
+
+def _table_markdown(table) -> str:
+    """Table I rendering shared by the eager and lazy tables.
+
+    ``table`` provides ``variants``, ``suites``, ``best_fit``,
+    ``suite_mean``, ``suite_best_fit``, ``aggregate_mean``,
+    ``overall_best_fit`` and ``_aggregate(app, variant) -> Optional[float]``.
+    """
+    variants = table.variants
+    lines = ["| application | " + " | ".join(variants) + " | best fit |",
+             "|---" * (len(variants) + 2) + "|"]
+    for suite, suite_apps in table.suites.items():
+        lines.append(f"| **{suite}** |" + " |" * (len(variants) + 1))
+        for app in suite_apps:
+            row = [f"| {app} "]
+            for v in variants:
+                agg = table._aggregate(app, v)
+                row.append("| - " if agg is None else f"| {agg:.3f} ")
+            row.append(f"| {table.best_fit(app)} |")
+            lines.append("".join(row))
+        means = " ".join(f"| {table.suite_mean(suite, v):.3f}"
+                         for v in variants)
+        lines.append(
+            f"| *{suite} mean* {means} | {table.suite_best_fit(suite)} |"
+        )
+    means = " ".join(f"| {table.aggregate_mean(v):.3f}" for v in variants)
+    lines.append(f"| **aggregate** {means} | {table.overall_best_fit()} |")
+    return "\n".join(lines)
+
+
+def _radar_markdown(table) -> str:
+    """Fig. 3 rendering shared by the eager and lazy tables.
+
+    ``table`` additionally provides ``apps`` and
+    ``_triplet(app, variant) -> Optional[(ics, hrcs, lbcs)]``.
+    """
+    variants = table.variants
+    header = "| application |" + "".join(
+        f" {v} ICS | {v} HRCS | {v} LBCS |" for v in variants
+    )
+    lines = [header, "|---" * (1 + 3 * len(variants)) + "|"]
+    for app in table.apps:
+        row = [f"| {app} "]
+        for v in variants:
+            trip = table._triplet(app, v)
+            if trip is None:
+                row.append("| - | - | - ")
+            else:
+                ics, hrcs, lbcs = trip
+                row.append(f"| {ics:.3f} | {hrcs:.3f} | {lbcs:.3f} ")
+        lines.append("".join(row) + "|")
+    return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -82,75 +152,210 @@ class DseTable:
 
     # ------------------------------------------------------------------ #
 
+    def _aggregate(self, app: str, variant: str) -> Optional[float]:
+        try:
+            return self.cell(app, variant).aggregate
+        except KeyError:
+            return None
+
+    def _triplet(self, app: str, variant: str) -> Optional[Tuple[float, float, float]]:
+        try:
+            r = self.cell(app, variant).report
+        except KeyError:
+            return None
+        return (r.ics, r.hrcs, r.lbcs)
+
     def markdown(self) -> str:
-        variants = self.variants
-        lines = ["| application | " + " | ".join(variants) + " | best fit |",
-                 "|---" * (len(variants) + 2) + "|"]
-        for suite, suite_apps in self.suites.items():
-            lines.append(f"| **{suite}** |" + " |" * (len(variants) + 1))
-            for app in suite_apps:
-                row = [f"| {app} "]
-                for v in variants:
-                    try:
-                        row.append(f"| {self.cell(app, v).aggregate:.3f} ")
-                    except KeyError:
-                        row.append("| - ")
-                row.append(f"| {self.best_fit(app)} |")
-                lines.append("".join(row))
-            means = " ".join(f"| {self.suite_mean(suite, v):.3f}" for v in variants)
-            lines.append(
-                f"| *{suite} mean* {means} | {self.suite_best_fit(suite)} |"
-            )
-        means = " ".join(f"| {self.aggregate_mean(v):.3f}" for v in variants)
-        lines.append(f"| **aggregate** {means} | {self.overall_best_fit()} |")
-        return "\n".join(lines)
+        return _table_markdown(self)
 
     def radar_markdown(self) -> str:
         """Fig. 3 analogue: per-app ICS/HRCS/LBCS triplets per variant."""
-        variants = self.variants
-        header = "| application |" + "".join(
-            f" {v} ICS | {v} HRCS | {v} LBCS |" for v in variants
+        return _radar_markdown(self)
+
+
+class LazyDseTable:
+    """``DseTable`` interface backed by a batched ``SweepResult``.
+
+    All aggregate queries (best fits, suite means, markdown) read the score
+    arrays directly; full ``CongruenceReport`` objects -- including the
+    per-component extended decomposition, which is inherently per-cell --
+    are materialized only when ``cell()`` is called, and cached.  This is
+    what keeps 10k-variant sweeps cheap: the O(A*V) work is vectorized and
+    the O(1) cells a caller inspects pay the scalar cost.
+    """
+
+    def __init__(self, result, suites: Mapping[str, Sequence[str]]):
+        self.result = result
+        self.suites: Dict[str, Sequence[str]] = dict(suites)
+        self._cell_cache: Dict[Tuple[str, str], DseCell] = {}
+        self._app_idx = {name: i for i, name in
+                         reversed(list(enumerate(result.profiles.names)))}
+        self._var_idx = {name: i for i, name in
+                         reversed(list(enumerate(result.machines.names)))}
+
+    # ------------------------------ lookups --------------------------- #
+
+    @property
+    def apps(self) -> List[str]:
+        seen: Dict[str, None] = {}
+        for name in self.result.profiles.names:
+            seen.setdefault(name, None)
+        return list(seen)
+
+    @property
+    def variants(self) -> List[str]:
+        seen: Dict[str, None] = {}
+        for name in self.result.machines.names:
+            seen.setdefault(name, None)
+        return list(seen)
+
+    def _indices(self, app: str, variant: str) -> Tuple[int, int]:
+        if app not in self._app_idx or variant not in self._var_idx:
+            raise KeyError((app, variant))
+        return self._app_idx[app], self._var_idx[variant]
+
+    def cell(self, app: str, variant: str) -> DseCell:
+        """Materialize one full cell (report + extended decomposition)."""
+        key = (app, variant)
+        if key not in self._cell_cache:
+            a, v = self._indices(app, variant)
+            self._cell_cache[key] = DseCell(
+                app=app, variant=variant, report=self._report(a, v))
+        return self._cell_cache[key]
+
+    @property
+    def cells(self) -> List[DseCell]:
+        """Materialize the full cross-product (expensive for huge sweeps)."""
+        return [self.cell(app, v)
+                for app in self.result.profiles.names
+                for v in self.result.machines.names]
+
+    def _report(self, a: int, v: int) -> CongruenceReport:
+        res = self.result
+        profile = res.profiles.profiles[a]
+        machine = res.machines.model(v)
+        gamma = float(res.gamma[a, v])
+        beta = float(res.beta[a])
+        alphas = {s.value: float(res.alphas[s.value][a, v])
+                  for s in ALL_SUBSYSTEMS}
+        scores = {SCORE_NAMES[s]: float(res.scores[SCORE_NAMES[s]][a, v])
+                  for s in ALL_SUBSYSTEMS}
+        extended = extended_decomposition(
+            profile, machine, gamma=gamma, beta=beta,
+            timing_model=res.timing_model, eps=res.eps)
+        return CongruenceReport(
+            name=profile.name,
+            machine=machine.name,
+            timing_model=res.timing_model,
+            gamma=gamma,
+            beta=beta,
+            alphas=alphas,
+            scores=scores,
+            extended=extended,
+            baseline=subsystem_times(profile, machine),
         )
-        lines = [header, "|---" * (1 + 3 * len(variants)) + "|"]
-        for app in self.apps:
-            row = [f"| {app} "]
-            for v in variants:
-                try:
-                    r = self.cell(app, v).report
-                    row.append(f"| {r.ics:.3f} | {r.hrcs:.3f} | {r.lbcs:.3f} ")
-                except KeyError:
-                    row.append("| - | - | - ")
-            lines.append("".join(row) + "|")
-        return "\n".join(lines)
+
+    # --------------------------- aggregates --------------------------- #
+
+    def best_fit(self, app: str) -> str:
+        return self.result.best_fit(app)
+
+    def suite_mean(self, suite: str, variant: str) -> float:
+        apps = set(self.suites[suite])
+        rows = [i for i, name in enumerate(self.result.profiles.names)
+                if name in apps]
+        if not rows or variant not in self._var_idx:
+            return float("nan")
+        col = self._var_idx[variant]
+        return float(self.result.aggregate[rows, col].mean())
+
+    def suite_best_fit(self, suite: str) -> str:
+        return min(self.variants, key=lambda v: self.suite_mean(suite, v))
+
+    def aggregate_mean(self, variant: str) -> float:
+        if variant not in self._var_idx:
+            return float("nan")
+        return float(self.result.aggregate[:, self._var_idx[variant]].mean())
+
+    def overall_best_fit(self) -> str:
+        return min(self.variants, key=self.aggregate_mean)
+
+    # ----------------------------- reports ---------------------------- #
+
+    def _aggregate(self, app: str, variant: str) -> Optional[float]:
+        try:
+            a, v = self._indices(app, variant)
+        except KeyError:
+            return None
+        return float(self.result.aggregate[a, v])
+
+    def _triplet(self, app: str, variant: str) -> Optional[Tuple[float, float, float]]:
+        try:
+            a, v = self._indices(app, variant)
+        except KeyError:
+            return None
+        s = self.result.scores
+        return (float(s["ICS"][a, v]), float(s["HRCS"][a, v]),
+                float(s["LBCS"][a, v]))
+
+    def markdown(self) -> str:
+        return _table_markdown(self)
+
+    def radar_markdown(self) -> str:
+        return _radar_markdown(self)
 
 
 def evaluate(
     profiles: Iterable[WorkloadProfile],
     *,
-    variants: Sequence[MachineModel] = VARIANTS,
+    variants=VARIANTS,
     suites: Optional[Mapping[str, Sequence[str]]] = None,
     timing_model: str = "serial",
     beta: Optional[float] = None,
     clamp: bool = True,
-) -> DseTable:
+    method: str = "auto",
+):
     """Score every (application x variant) cell.
 
     The expensive compile happened once per profile; this sweep is pure
     arithmetic -- the paper's lightweight DSE loop.
+
+    ``variants`` accepts either a sequence of ``MachineModel`` or a packed
+    ``sweep.MachineBatch`` (e.g. from ``ParamSpace.sample``).  ``method``
+    selects the execution path: ``"batched"`` (vectorized, returns a
+    ``LazyDseTable``), ``"scalar"`` (reference per-cell loop, returns an
+    eager ``DseTable``), or ``"auto"`` (batched).  Both paths agree to
+    ~1e-9 and expose the same table interface.
     """
+    from repro.core.sweep import MachineBatch, batched_congruence
+
     profiles = list(profiles)
     if suites is None:
         suites = {"all": [p.name for p in profiles]}
+    if method == "auto":
+        method = "batched"
+
+    if method == "batched":
+        machines = (variants if isinstance(variants, MachineBatch)
+                    else MachineBatch.from_models(list(variants)))
+        result = batched_congruence(
+            profiles, machines, beta=beta, beta_ref=0,
+            timing_model=timing_model, clamp=clamp)
+        return LazyDseTable(result, dict(suites))
+
+    if method != "scalar":
+        raise ValueError(f"unknown evaluate method {method!r}")
+
+    models = (variants.models() if isinstance(variants, MachineBatch)
+              else list(variants))
     cells: List[DseCell] = []
     for p in profiles:
         # Paper semantics: beta is a USER-DEFINED target per application,
         # held constant across architecture variants (Table I compares
         # variants against the same target).  Default: derived once from the
         # baseline (first) variant.
-        from repro.core.congruence import default_beta
-
-        app_beta = beta if beta is not None else default_beta(p, variants[0])
-        for m in variants:
+        app_beta = beta if beta is not None else default_beta(p, models[0])
+        for m in models:
             rep = profile_congruence(
                 p, m, timing_model=timing_model, beta=app_beta, clamp=clamp
             )

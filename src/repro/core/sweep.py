@@ -1,0 +1,722 @@
+"""Vectorized design-space sweep engine (paper §III at population scale).
+
+The paper's central economics: packing/placement/routing (for us: the XLA
+compile) is paid once per application, after which re-timing an architecture
+variant is pure arithmetic.  The scalar DSE loop in ``repro.core.dse`` walks
+(app, variant, subsystem) cells one at a time in Python, which wastes that
+cheapness.  This module re-states the whole pipeline --
+``subsystem_times`` -> ``step_time`` -> Eq. 1 ``congruence_score`` ->
+aggregate (paper §II-B, §III-C) -- as struct-of-arrays NumPy kernels with
+shape ``(A, V)`` (apps x variants), so sweeping thousands of machine designs
+costs a handful of array ops.
+
+Three layers:
+
+  ParamSpace     -- bounded design space over the machine-model constants
+                    (``peak_flops``, ``hbm_bw``, ``ici_bw``, ``ici_links``,
+                    ``inter_pod_bw``, per-subsystem ``scale``); generates
+                    populations by full grid or low-discrepancy (Halton)
+                    random sampling, the paper's "denser / densest" axis
+                    extended to a continuous sweep.
+  MachineBatch / ProfileBatch
+                 -- struct-of-arrays packings of ``MachineModel`` /
+                    ``WorkloadProfile`` (one float64 array per field).
+  batched_*      -- vectorized re-implementations of the scalar timing +
+                    congruence pipeline, numerically equivalent to the
+                    reference implementations to ~1e-9 (asserted in
+                    tests/test_sweep.py).
+
+``SweepResult`` holds the full score tensor plus the two DSE extractions the
+paper's Table I points at: per-app best-fit variants (lowest aggregate =
+smallest radar area, §III-C) and the Pareto front of aggregate congruence
+vs. an area/cost proxy (the PPA trade-off axis of §I).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.costs import WorkloadProfile
+from repro.core.machine import (
+    ALL_SUBSYSTEMS,
+    IDEAL_EPS,
+    MachineModel,
+    Subsystem,
+    TPU_V5E,
+)
+
+# Score name per subsystem, kept in one canonical order everywhere.
+_SCORE_OF = {
+    Subsystem.COMPUTE: "LBCS",
+    Subsystem.MEMORY: "HRCS",
+    Subsystem.INTERCONNECT: "ICS",
+}
+
+# The machine-model constants a sweep may vary, in canonical order.
+SWEEP_PARAMS = (
+    "peak_flops",
+    "hbm_bw",
+    "ici_bw",
+    "ici_links",
+    "inter_pod_bw",
+    "scale_compute",
+    "scale_memory",
+    "scale_interconnect",
+)
+
+
+# --------------------------------------------------------------------------- #
+# ParamSpace: grid + low-discrepancy population generators
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Dim:
+    """One bounded sweep dimension.
+
+    ``log=True`` spaces points geometrically -- hardware rates span decades,
+    so a log grid is the natural "denser / densest" ladder.  ``integer``
+    rounds to whole values (link counts).
+    """
+
+    lo: float
+    hi: float
+    log: bool = True
+    integer: bool = False
+
+    def points(self, k: int) -> np.ndarray:
+        """``k`` grid points across the range (deduplicated if integer)."""
+        if k <= 1:
+            pts = np.array([self.hi if self.integer else
+                            float(np.sqrt(self.lo * self.hi)) if self.log
+                            else 0.5 * (self.lo + self.hi)])
+        elif self.log:
+            pts = np.geomspace(self.lo, self.hi, k)
+        else:
+            pts = np.linspace(self.lo, self.hi, k)
+        if self.integer:
+            pts = np.unique(np.rint(pts))
+        return pts.astype(np.float64)
+
+    def from_unit(self, u: np.ndarray) -> np.ndarray:
+        """Map uniform [0, 1) samples onto the dimension's range."""
+        u = np.asarray(u, dtype=np.float64)
+        if self.integer:
+            lo, hi = int(round(self.lo)), int(round(self.hi))
+            return np.clip(np.floor(lo + (hi - lo + 1) * u), lo, hi)
+        if self.log:
+            return self.lo * (self.hi / self.lo) ** u
+        return self.lo + (self.hi - self.lo) * u
+
+
+_HALTON_PRIMES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)
+
+
+def _radical_inverse(index: np.ndarray, base: int) -> np.ndarray:
+    """Van der Corput radical inverse of ``index`` in ``base`` (vectorized)."""
+    idx = np.asarray(index, dtype=np.int64).copy()
+    inv = np.zeros(idx.shape, dtype=np.float64)
+    frac = 1.0 / base
+    while np.any(idx > 0):
+        inv += frac * (idx % base)
+        idx //= base
+        frac /= base
+    return inv
+
+
+def halton(n: int, d: int, seed: int = 0) -> np.ndarray:
+    """``(n, d)`` low-discrepancy points in [0, 1).
+
+    Halton sequence with a seeded Cranley-Patterson rotation so different
+    seeds give different (still low-discrepancy) populations.
+    """
+    if d > len(_HALTON_PRIMES):
+        raise ValueError(f"halton supports at most {len(_HALTON_PRIMES)} dims")
+    shifts = np.random.default_rng(seed).random(d)
+    out = np.empty((n, d), dtype=np.float64)
+    for j in range(d):
+        out[:, j] = (_radical_inverse(np.arange(1, n + 1), _HALTON_PRIMES[j])
+                     + shifts[j]) % 1.0
+    return out
+
+
+@dataclasses.dataclass
+class ParamSpace:
+    """Bounded machine design space around a ``nominal`` machine.
+
+    ``dims`` maps a subset of ``SWEEP_PARAMS`` to ``Dim`` ranges; parameters
+    not present stay pinned at the nominal machine's value.
+    """
+
+    dims: Dict[str, Dim]
+    nominal: MachineModel = TPU_V5E
+
+    def __post_init__(self) -> None:
+        for name in self.dims:
+            if name not in SWEEP_PARAMS:
+                raise KeyError(
+                    f"unknown sweep parameter {name!r}; have {SWEEP_PARAMS}")
+
+    @staticmethod
+    def default(nominal: MachineModel = TPU_V5E, span: float = 4.0,
+                max_links: int = 8) -> "ParamSpace":
+        """The paper's density ladder as a continuous space: every rate swept
+        geometrically ``span``x below/above the nominal chip, link count up
+        to ``max_links``."""
+        dims = {
+            "peak_flops": Dim(nominal.peak_flops / span, nominal.peak_flops * span),
+            "hbm_bw": Dim(nominal.hbm_bw / span, nominal.hbm_bw * span),
+            "ici_bw": Dim(nominal.ici_bw / span, nominal.ici_bw * span),
+            "ici_links": Dim(1, max_links, log=False, integer=True),
+            "inter_pod_bw": Dim(nominal.inter_pod_bw / span,
+                                nominal.inter_pod_bw * span),
+        }
+        return ParamSpace(dims=dims, nominal=nominal)
+
+    # ------------------------------------------------------------------ #
+
+    def _nominal_value(self, name: str) -> float:
+        if name.startswith("scale_"):
+            return self.nominal.scale_for(Subsystem(name[len("scale_"):]))
+        return float(getattr(self.nominal, name))
+
+    def _columns_to_batch(self, cols: Dict[str, np.ndarray], n: int,
+                          prefix: str) -> "MachineBatch":
+        full = {}
+        for name in SWEEP_PARAMS:
+            if name in cols:
+                full[name] = np.asarray(cols[name], dtype=np.float64)
+            else:
+                full[name] = np.full(n, self._nominal_value(name))
+        return MachineBatch(
+            names=[f"{prefix}{i:05d}" for i in range(n)], **full)
+
+    def grid(self, points: Union[int, Mapping[str, int]] = 3) -> "MachineBatch":
+        """Full cross-product grid.
+
+        ``points`` is either a per-dimension count mapping or one count
+        applied to every dimension in the space.
+        """
+        if isinstance(points, int):
+            points = {name: points for name in self.dims}
+        axes = {name: self.dims[name].points(k) for name, k in points.items()
+                if name in self.dims}
+        names = list(axes)
+        combos = list(itertools.product(*(axes[n] for n in names)))
+        cols = {n: np.array([c[i] for c in combos], dtype=np.float64)
+                for i, n in enumerate(names)}
+        return self._columns_to_batch(cols, len(combos), "grid-")
+
+    def sample(self, n: int, seed: int = 0) -> "MachineBatch":
+        """``n`` low-discrepancy (Halton) samples across every dimension."""
+        names = list(self.dims)
+        unit = halton(n, len(names), seed=seed)
+        cols = {name: self.dims[name].from_unit(unit[:, j])
+                for j, name in enumerate(names)}
+        return self._columns_to_batch(cols, n, "sweep-")
+
+
+# --------------------------------------------------------------------------- #
+# Struct-of-arrays packings
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class MachineBatch:
+    """``V`` machine variants as one float64 array per model constant."""
+
+    names: List[str]
+    peak_flops: np.ndarray
+    hbm_bw: np.ndarray
+    ici_bw: np.ndarray
+    ici_links: np.ndarray
+    inter_pod_bw: np.ndarray
+    scale_compute: np.ndarray
+    scale_memory: np.ndarray
+    scale_interconnect: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    @property
+    def ici_bw_total(self) -> np.ndarray:
+        return self.ici_bw * self.ici_links
+
+    def scale_for(self, subsystem: Subsystem) -> np.ndarray:
+        return {
+            Subsystem.COMPUTE: self.scale_compute,
+            Subsystem.MEMORY: self.scale_memory,
+            Subsystem.INTERCONNECT: self.scale_interconnect,
+        }[subsystem]
+
+    @staticmethod
+    def from_models(models: Sequence[MachineModel]) -> "MachineBatch":
+        arr = lambda get: np.array([get(m) for m in models], dtype=np.float64)
+        return MachineBatch(
+            names=[m.name for m in models],
+            peak_flops=arr(lambda m: m.peak_flops),
+            hbm_bw=arr(lambda m: m.hbm_bw),
+            ici_bw=arr(lambda m: m.ici_bw),
+            ici_links=arr(lambda m: m.ici_links),
+            inter_pod_bw=arr(lambda m: m.inter_pod_bw),
+            scale_compute=arr(lambda m: m.scale_for(Subsystem.COMPUTE)),
+            scale_memory=arr(lambda m: m.scale_for(Subsystem.MEMORY)),
+            scale_interconnect=arr(lambda m: m.scale_for(Subsystem.INTERCONNECT)),
+        )
+
+    @staticmethod
+    def concat(*batches: "MachineBatch") -> "MachineBatch":
+        cat = lambda get: np.concatenate([get(b) for b in batches])
+        return MachineBatch(
+            names=[n for b in batches for n in b.names],
+            peak_flops=cat(lambda b: b.peak_flops),
+            hbm_bw=cat(lambda b: b.hbm_bw),
+            ici_bw=cat(lambda b: b.ici_bw),
+            ici_links=cat(lambda b: b.ici_links),
+            inter_pod_bw=cat(lambda b: b.inter_pod_bw),
+            scale_compute=cat(lambda b: b.scale_compute),
+            scale_memory=cat(lambda b: b.scale_memory),
+            scale_interconnect=cat(lambda b: b.scale_interconnect),
+        )
+
+    def model(self, i: int) -> MachineModel:
+        """Materialize variant ``i`` as a scalar ``MachineModel``."""
+        return MachineModel(
+            name=self.names[i],
+            peak_flops=float(self.peak_flops[i]),
+            hbm_bw=float(self.hbm_bw[i]),
+            ici_bw=float(self.ici_bw[i]),
+            ici_links=int(self.ici_links[i]),
+            inter_pod_bw=float(self.inter_pod_bw[i]),
+            scale={
+                Subsystem.COMPUTE.value: float(self.scale_compute[i]),
+                Subsystem.MEMORY.value: float(self.scale_memory[i]),
+                Subsystem.INTERCONNECT.value: float(self.scale_interconnect[i]),
+            },
+        )
+
+    def models(self) -> List[MachineModel]:
+        return [self.model(i) for i in range(len(self))]
+
+    def area(self, reference: MachineModel = TPU_V5E) -> np.ndarray:
+        """Relative silicon/cost proxy per variant.
+
+        Mean of the four provisioned rates normalized to ``reference`` --
+        the PPA "area" axis the paper trades congruence against when raising
+        DSP/BRAM density.  Delay ``scale`` factors model degradation, not
+        provisioned resources, so they do not enter the proxy.
+        """
+        return (
+            self.peak_flops / reference.peak_flops
+            + self.hbm_bw / reference.hbm_bw
+            + self.ici_bw_total / (reference.ici_bw * reference.ici_links)
+            + self.inter_pod_bw / reference.inter_pod_bw
+        ) / 4.0
+
+    def params_row(self, i: int) -> Dict[str, float]:
+        return {name: float(getattr(self, name)[i]) for name in SWEEP_PARAMS}
+
+
+@dataclasses.dataclass
+class ProfileBatch:
+    """``A`` workload profiles packed into the arrays the timing model reads.
+
+    ``mem_bytes`` applies the scalar path's fallback (``hbm_bytes`` when
+    positive, else raw ``bytes_accessed``) at pack time.
+    """
+
+    names: List[str]
+    flops: np.ndarray
+    mem_bytes: np.ndarray
+    collective_bytes: np.ndarray
+    pod_collective_bytes: np.ndarray
+    model_flops: np.ndarray
+    num_devices: np.ndarray
+    profiles: List[WorkloadProfile]
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    @staticmethod
+    def from_profiles(profiles: Sequence[WorkloadProfile]) -> "ProfileBatch":
+        profiles = list(profiles)
+        return ProfileBatch(
+            names=[p.name for p in profiles],
+            flops=np.array([p.flops for p in profiles], dtype=np.float64),
+            mem_bytes=np.array(
+                [p.hbm_bytes if p.hbm_bytes > 0 else p.bytes_accessed
+                 for p in profiles], dtype=np.float64),
+            collective_bytes=np.array(
+                [p.total_collective_bytes for p in profiles], dtype=np.float64),
+            pod_collective_bytes=np.array(
+                [p.pod_collective_bytes for p in profiles], dtype=np.float64),
+            model_flops=np.array(
+                [p.model_flops for p in profiles], dtype=np.float64),
+            num_devices=np.array(
+                [p.num_devices for p in profiles], dtype=np.float64),
+            profiles=profiles,
+        )
+
+
+def _as_profile_batch(profiles) -> ProfileBatch:
+    if isinstance(profiles, ProfileBatch):
+        return profiles
+    return ProfileBatch.from_profiles(list(profiles))
+
+
+def _as_machine_batch(machines) -> MachineBatch:
+    if isinstance(machines, MachineBatch):
+        return machines
+    return MachineBatch.from_models(list(machines))
+
+
+# --------------------------------------------------------------------------- #
+# Batched timing + congruence kernels
+# --------------------------------------------------------------------------- #
+
+
+def batched_raw_times(
+    profiles: ProfileBatch, machines: MachineBatch
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unscaled per-subsystem roofline terms, each shaped ``(A, V)``.
+
+    Mirrors ``timing.subsystem_times`` with the per-subsystem delay scales
+    factored out, so idealization (replacing one scale with ``eps``) is a
+    multiply instead of a re-evaluation.
+    """
+    raw_c = profiles.flops[:, None] / machines.peak_flops[None, :]
+    raw_m = profiles.mem_bytes[:, None] / machines.hbm_bw[None, :]
+    ici_bytes = profiles.collective_bytes - profiles.pod_collective_bytes
+    t_ici = ici_bytes[:, None] / machines.ici_bw_total[None, :]
+    pod = profiles.pod_collective_bytes[:, None]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_pod = np.where(pod != 0.0, pod / machines.inter_pod_bw[None, :], 0.0)
+    raw_i = t_ici + t_pod
+    return raw_c, raw_m, raw_i
+
+
+def _combine(tc: np.ndarray, tm: np.ndarray, ti: np.ndarray,
+             timing_model: str) -> np.ndarray:
+    if timing_model == "serial":
+        return tc + tm + ti
+    if timing_model == "overlap":
+        return np.maximum(np.maximum(tc, tm), ti)
+    raise ValueError(f"unknown timing model {timing_model!r}")
+
+
+def batched_step_time(
+    profiles, machines, timing_model: str = "serial"
+) -> np.ndarray:
+    """``(A, V)`` step-time matrix -- vectorized ``timing.step_time``."""
+    pb, mb = _as_profile_batch(profiles), _as_machine_batch(machines)
+    raw_c, raw_m, raw_i = batched_raw_times(pb, mb)
+    return _combine(
+        mb.scale_compute[None, :] * raw_c,
+        mb.scale_memory[None, :] * raw_m,
+        mb.scale_interconnect[None, :] * raw_i,
+        timing_model,
+    )
+
+
+def batched_eq1(alpha: np.ndarray, gamma: np.ndarray,
+                beta: np.ndarray) -> np.ndarray:
+    """Eq. 1 over arrays, with the scalar path's gamma==beta degeneracy -> 0."""
+    denom = gamma - beta
+    safe = np.where(denom == 0.0, 1.0, denom)
+    return np.where(denom == 0.0, 0.0, 1.0 - (alpha - beta) / safe)
+
+
+def _default_beta_from_raw(
+    pb: ProfileBatch, mb: MachineBatch,
+    raw_c: np.ndarray, raw_m: np.ndarray, raw_i: np.ndarray,
+    beta_ref: int,
+) -> np.ndarray:
+    """Default-beta kernel over precomputed raw terms (one column's work)."""
+    gamma_ref = (
+        mb.scale_compute[beta_ref] * raw_c[:, beta_ref]
+        + mb.scale_memory[beta_ref] * raw_m[:, beta_ref]
+        + mb.scale_interconnect[beta_ref] * raw_i[:, beta_ref]
+    )
+    valid = (pb.model_flops > 0) & (pb.num_devices > 0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_ideal = np.where(
+            valid,
+            pb.model_flops / (pb.num_devices * mb.peak_flops[beta_ref]),
+            np.inf,
+        )
+    return np.where(valid, np.minimum(t_ideal, 0.5 * gamma_ref),
+                    0.05 * gamma_ref)
+
+
+def default_beta_batched(
+    profiles, machines, beta_ref: int = 0
+) -> np.ndarray:
+    """Vectorized ``congruence.default_beta`` against variant ``beta_ref``.
+
+    The paper's beta is a per-application user target held constant across
+    variants (Table I compares architectures against one target), so the
+    default derives from a single reference variant -- by convention the
+    first ("baseline") column, matching ``dse.evaluate``.
+    """
+    pb, mb = _as_profile_batch(profiles), _as_machine_batch(machines)
+    raw_c, raw_m, raw_i = batched_raw_times(pb, mb)
+    return _default_beta_from_raw(pb, mb, raw_c, raw_m, raw_i, beta_ref)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Full ``(A, V)`` score tensor plus the Table I / Pareto extractions."""
+
+    profiles: ProfileBatch
+    machines: MachineBatch
+    timing_model: str
+    eps: float
+    clamp: bool
+    beta: np.ndarray                 # (A,) per-app target
+    gamma: np.ndarray                # (A, V) baseline step times
+    alphas: Dict[str, np.ndarray]    # subsystem value -> (A, V)
+    scores: Dict[str, np.ndarray]    # ICS/HRCS/LBCS -> (A, V)
+    aggregate: np.ndarray            # (A, V) L2 magnitudes
+
+    # ------------------------------ lookups --------------------------- #
+
+    @property
+    def apps(self) -> List[str]:
+        return list(self.profiles.names)
+
+    @property
+    def variant_names(self) -> List[str]:
+        return list(self.machines.names)
+
+    def app_index(self, app: str) -> int:
+        return self.profiles.names.index(app)
+
+    # --------------------------- extractions -------------------------- #
+
+    def best_fit_indices(self) -> np.ndarray:
+        """Per-app argmin over variants (lowest aggregate = best fit)."""
+        return np.argmin(self.aggregate, axis=1)
+
+    def best_fit(self, app: str) -> str:
+        return self.machines.names[int(
+            np.argmin(self.aggregate[self.app_index(app)]))]
+
+    def aggregate_mean(self) -> np.ndarray:
+        """Suite-mean aggregate per variant (Table I bottom row), shape (V,)."""
+        return self.aggregate.mean(axis=0)
+
+    def area(self, reference: MachineModel = TPU_V5E) -> np.ndarray:
+        return self.machines.area(reference)
+
+    def pareto_front(self, reference: MachineModel = TPU_V5E) -> List[int]:
+        """Variant indices on the (area, mean aggregate) Pareto front.
+
+        Both axes are minimized: cheaper silicon and better congruence fit.
+        Returned sorted by increasing area; no returned point is dominated
+        by any variant in the sweep (asserted in tests/test_sweep.py).
+        """
+        area = self.area(reference)
+        agg = self.aggregate_mean()
+        order = sorted(range(len(self.machines)),
+                       key=lambda i: (area[i], agg[i]))
+        front: List[int] = []
+        best = np.inf
+        for i in order:
+            if agg[i] < best:
+                front.append(i)
+                best = agg[i]
+        return front
+
+    def top_variants(self, k: int = 10) -> List[int]:
+        """Variant indices with the lowest suite-mean aggregate."""
+        order = np.argsort(self.aggregate_mean(), kind="stable")
+        return [int(i) for i in order[:k]]
+
+    # ----------------------------- reports ---------------------------- #
+
+    def markdown(self, top_k: int = 10) -> str:
+        """Top-``top_k`` variants by suite-mean aggregate + the Pareto front."""
+        area = self.area()
+        agg = self.aggregate_mean()
+        front = set(self.pareto_front())
+        best_counts = np.bincount(self.best_fit_indices(),
+                                  minlength=len(self.machines))
+        lines = [
+            f"sweep: {len(self.profiles)} apps x {len(self.machines)} "
+            f"variants ({self.timing_model} timing)",
+            "",
+            "| variant | mean aggregate | area | best-fit apps | pareto | "
+            "peak_flops | hbm_bw | ici_bw x links | inter_pod_bw |",
+            "|---" * 9 + "|",
+        ]
+        for i in self.top_variants(top_k):
+            m = self.machines
+            lines.append(
+                f"| {m.names[i]} | {agg[i]:.4f} | {area[i]:.3f} "
+                f"| {int(best_counts[i])} | {'*' if i in front else ''} "
+                f"| {m.peak_flops[i]:.3e} | {m.hbm_bw[i]:.3e} "
+                f"| {m.ici_bw[i]:.3e} x {int(m.ici_links[i])} "
+                f"| {m.inter_pod_bw[i]:.3e} |")
+        lines += ["", f"pareto front ({len(front)} variants, by area):", ""]
+        for i in self.pareto_front():
+            lines.append(
+                f"- {self.machines.names[i]}: area={area[i]:.3f} "
+                f"aggregate={agg[i]:.4f}")
+        return "\n".join(lines)
+
+    def to_json(self, top_k: Optional[int] = None) -> dict:
+        """JSON-serializable sweep summary (full score tensor omitted unless
+        the sweep is small -- at 10k variants the matrix dwarfs the summary)."""
+        area = self.area()
+        agg = self.aggregate_mean()
+        front = self.pareto_front()
+        best_idx = self.best_fit_indices()
+        top = self.top_variants(top_k if top_k is not None
+                                else min(len(self.machines), 32))
+        out = {
+            "num_apps": len(self.profiles),
+            "num_variants": len(self.machines),
+            "timing_model": self.timing_model,
+            "clamp": self.clamp,
+            "apps": self.apps,
+            "best_fit": {app: self.machines.names[int(best_idx[a])]
+                         for a, app in enumerate(self.apps)},
+            "beta_s": {app: float(self.beta[a])
+                       for a, app in enumerate(self.apps)},
+            "pareto_front": [
+                {"variant": self.machines.names[i],
+                 "area": float(area[i]),
+                 "mean_aggregate": float(agg[i]),
+                 "params": self.machines.params_row(i)}
+                for i in front],
+            "top_variants": [
+                {"variant": self.machines.names[i],
+                 "area": float(area[i]),
+                 "mean_aggregate": float(agg[i]),
+                 "best_fit_apps": [
+                     app for a, app in enumerate(self.apps)
+                     if int(best_idx[a]) == i],
+                 "params": self.machines.params_row(i)}
+                for i in top],
+        }
+        if len(self.machines) * len(self.profiles) <= 4096:
+            out["aggregate"] = self.aggregate.tolist()
+            out["scores"] = {k: v.tolist() for k, v in self.scores.items()}
+        return out
+
+
+def batched_congruence(
+    profiles,
+    machines,
+    *,
+    beta=None,
+    beta_ref: int = 0,
+    timing_model: str = "serial",
+    eps: float = IDEAL_EPS,
+    clamp: bool = False,
+) -> SweepResult:
+    """Vectorized ``profile_congruence`` over the full (apps x variants) grid.
+
+    One pass computes gamma, all three alphas, the Eq. 1 scores and the L2
+    aggregates as ``(A, V)`` arrays -- the paper's per-subsystem idealization
+    loop becomes three scale substitutions on precomputed raw terms.
+
+    ``beta`` may be None (per-app default derived from variant ``beta_ref``,
+    matching ``dse.evaluate``), a scalar applied to every app, or an ``(A,)``
+    array of per-app targets.
+    """
+    pb, mb = _as_profile_batch(profiles), _as_machine_batch(machines)
+    if len(mb) == 0:
+        raise ValueError("batched_congruence needs at least one machine variant")
+    raw_c, raw_m, raw_i = batched_raw_times(pb, mb)
+    scaled = {
+        Subsystem.COMPUTE: mb.scale_compute[None, :] * raw_c,
+        Subsystem.MEMORY: mb.scale_memory[None, :] * raw_m,
+        Subsystem.INTERCONNECT: mb.scale_interconnect[None, :] * raw_i,
+    }
+    gamma = _combine(scaled[Subsystem.COMPUTE], scaled[Subsystem.MEMORY],
+                     scaled[Subsystem.INTERCONNECT], timing_model)
+
+    if beta is None:
+        beta_vec = _default_beta_from_raw(pb, mb, raw_c, raw_m, raw_i,
+                                          beta_ref)
+    else:
+        beta_vec = np.broadcast_to(
+            np.asarray(beta, dtype=np.float64), (len(pb),)).copy()
+    beta_col = beta_vec[:, None]
+
+    alphas: Dict[str, np.ndarray] = {}
+    scores: Dict[str, np.ndarray] = {}
+    for subsystem, raw in zip(ALL_SUBSYSTEMS, (raw_c, raw_m, raw_i)):
+        terms = dict(scaled)
+        terms[subsystem] = eps * raw
+        alpha = _combine(terms[Subsystem.COMPUTE], terms[Subsystem.MEMORY],
+                         terms[Subsystem.INTERCONNECT], timing_model)
+        score = batched_eq1(alpha, gamma, beta_col)
+        if clamp:
+            score = np.clip(score, 0.0, 1.0)
+        alphas[subsystem.value] = alpha
+        scores[_SCORE_OF[subsystem]] = score
+
+    aggregate = np.sqrt(
+        scores["ICS"] ** 2 + scores["HRCS"] ** 2 + scores["LBCS"] ** 2)
+
+    return SweepResult(
+        profiles=pb,
+        machines=mb,
+        timing_model=timing_model,
+        eps=eps,
+        clamp=clamp,
+        beta=beta_vec,
+        gamma=gamma,
+        alphas=alphas,
+        scores=scores,
+        aggregate=aggregate,
+    )
+
+
+def run_sweep(
+    profiles,
+    *,
+    space: Optional[ParamSpace] = None,
+    n: int = 256,
+    mode: str = "random",
+    seed: int = 0,
+    include_named: Sequence[MachineModel] = (),
+    beta=None,
+    beta_machine: Optional[MachineModel] = None,
+    timing_model: str = "serial",
+    clamp: bool = True,
+) -> SweepResult:
+    """One-call sweep: generate a population and score it.
+
+    ``mode="random"`` draws ``n`` Halton samples; ``mode="grid"`` builds a
+    full grid with ``ceil(n ** (1/d))`` points per dimension.  Any
+    ``include_named`` models (e.g. the paper's baseline/denser/densest) are
+    prepended.  When ``beta`` is None the per-app default target is derived
+    against ``beta_machine``, defaulting to the first named model or, with
+    no named models, the space's nominal chip -- never an arbitrary sampled
+    design, so scores stay comparable across seeds.
+    """
+    profiles = _as_profile_batch(profiles)  # pack once; input may be a generator
+    space = space or ParamSpace.default()
+    if mode == "random":
+        pop = space.sample(n, seed=seed)
+    elif mode == "grid":
+        per_dim = max(2, int(np.ceil(n ** (1.0 / max(len(space.dims), 1)))))
+        pop = space.grid(per_dim)
+    else:
+        raise ValueError(f"unknown sweep mode {mode!r}")
+    if include_named:
+        pop = MachineBatch.concat(MachineBatch.from_models(include_named), pop)
+    if beta is None:
+        ref = beta_machine or (include_named[0] if include_named
+                               else space.nominal)
+        beta = default_beta_batched(
+            profiles, MachineBatch.from_models([ref]))
+    return batched_congruence(
+        profiles, pop, beta=beta, timing_model=timing_model, clamp=clamp)

@@ -58,7 +58,7 @@ def _probe_hbm(cfg, shape, mesh, sc, seq_len: int, batch: int,
         pcfg = pcfg.replace(
             ssm=dataclasses.replace(pcfg.ssm, state_dim=state_dim))
     cell = input_specs(pcfg, pshape, mesh, sc)
-    with jax.set_mesh(mesh), CTX.use_rules(
+    with MESH.use_mesh(mesh), CTX.use_rules(
             SH.activation_rules(mesh, sc, kind=shape.kind)):
         compiled = jax.jit(
             cell.step_fn, in_shardings=cell.in_shardings,
@@ -111,6 +111,41 @@ def scan_kernel_bytes_per_layer(cfg, shape, n_dev: int) -> float:
     return io * mult / n_dev
 
 
+def machine_candidates(n: int, seed: int = 0):
+    """Candidate generator for the co-design step: the paper's three named
+    variants plus ``n`` low-discrepancy designs from the default ParamSpace.
+
+    The named variants come first so the batched default-beta reference
+    stays the baseline chip (same convention as ``dse.evaluate``)."""
+    from repro.core.sweep import MachineBatch, ParamSpace
+
+    return MachineBatch.concat(
+        MachineBatch.from_models(M.VARIANTS),
+        ParamSpace.default().sample(n, seed=seed))
+
+
+def codesign_sweep(profile, n: int, seed: int = 0) -> dict:
+    """Score one profile against a sweep population and summarize the
+    co-design answer: best-fit variant + (area, congruence) Pareto front."""
+    from repro.core.sweep import batched_congruence
+
+    machines = machine_candidates(n, seed=seed)
+    res = batched_congruence([profile], machines, clamp=True)
+    best = int(res.best_fit_indices()[0])
+    front = res.pareto_front()
+    return {
+        "num_variants": len(machines),
+        "best_variant": machines.names[best],
+        "best_aggregate": float(res.aggregate[0, best]),
+        "best_params": machines.params_row(best),
+        "pareto": [
+            {"variant": machines.names[i],
+             "area": float(res.area()[i]),
+             "aggregate": float(res.aggregate[0, i])}
+            for i in front],
+    }
+
+
 def attention_layers(cfg) -> int:
     if cfg.family == Family.HYBRID:
         from repro.models.transformer import hybrid_layout
@@ -134,6 +169,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tag", default=None)
     ap.add_argument("--mode", choices=("flash", "scan"), default="flash")
     ap.add_argument("--sp", choices=("on", "off"), default="on")
+    ap.add_argument("--sweep", type=int, default=0, metavar="N",
+                    help="after substitution, sweep N generated machine "
+                         "variants and report the best fit + Pareto front")
+    ap.add_argument("--sweep-seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch)
@@ -188,6 +227,15 @@ def main(argv=None) -> int:
     profile.name += f"+{args.mode}"
     after = R.analyze(profile, M.TPU_V5E)
     print("after: ", after.one_liner())
+
+    if args.sweep > 0:
+        # Co-design: which machine design fits the OPTIMIZED workload best?
+        cd = codesign_sweep(profile, args.sweep, seed=args.sweep_seed)
+        profile.meta["codesign_sweep"] = cd
+        print(f"codesign sweep over {cd['num_variants']} variants: "
+              f"best={cd['best_variant']} "
+              f"aggregate={cd['best_aggregate']:.4f} "
+              f"pareto={len(cd['pareto'])} points")
 
     if args.out:
         os.makedirs(args.out, exist_ok=True)

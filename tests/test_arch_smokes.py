@@ -42,6 +42,7 @@ def test_smoke_forward(arch):
     assert bool(jnp.all(jnp.isfinite(hidden)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)

@@ -27,6 +27,7 @@ FA_SHAPES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("shape", FA_SHAPES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal,window", [(True, None), (False, None),
@@ -67,6 +68,7 @@ def test_flash_attention_blocks_invariance():
 # --------------------------------------------------------------------------- #
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("rows,d", [(8, 128), (37, 256), (256, 512), (1, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_rmsnorm_sweep(rows, d, dtype):
@@ -94,6 +96,7 @@ def test_rmsnorm_residual():
 # --------------------------------------------------------------------------- #
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("B,S,Din,N,chunk,dblk", [
     (1, 32, 64, 4, 8, 32),
     (2, 64, 128, 8, 16, 64),

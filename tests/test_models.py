@@ -68,6 +68,7 @@ def make_batch(cfg, B=2, S=12, key=jax.random.PRNGKey(2)):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", list(ALL_CFGS))
 def test_forward_loss_finite(name):
     cfg = ALL_CFGS[name]
@@ -80,6 +81,7 @@ def test_forward_loss_finite(name):
     jax.tree.map(lambda p, a: None, params, axes)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", list(ALL_CFGS))
 def test_decode_matches_forward(name):
     cfg = ALL_CFGS[name]
@@ -181,6 +183,7 @@ def test_vlm_prefix_is_bidirectional():
     assert float(jnp.max(jnp.abs(h1 - h2))) > 1e-6
 
 
+@pytest.mark.slow
 def test_param_counts_match_instantiated():
     from repro.configs import SMOKE_REGISTRY
     for name, cfg in SMOKE_REGISTRY.items():

@@ -1,0 +1,297 @@
+"""Sweep engine: batched == scalar equivalence, population generators,
+Pareto invariants, and the lazy DSE table.
+
+The batched kernels in ``repro.core.sweep`` re-implement the scalar timing +
+Eq. 1 pipeline as (A, V) array ops; these tests pin them to the scalar
+reference (``profile_congruence`` / ``evaluate(method="scalar")``) to within
+1e-9, which is what licenses the fast path as the ``evaluate()`` default.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    TPU_V5E,
+    VARIANTS,
+    WorkloadProfile,
+    profile_congruence,
+)
+from repro.core.congruence import default_beta
+from repro.core.dse import DseTable, LazyDseTable, evaluate
+from repro.core.sweep import (
+    Dim,
+    MachineBatch,
+    ParamSpace,
+    ProfileBatch,
+    batched_congruence,
+    batched_step_time,
+    halton,
+    run_sweep,
+)
+from repro.core.timing import step_time
+
+RTOL = 1e-9
+
+
+def random_profiles(n, seed=0):
+    rng = random.Random(seed)
+    out = []
+    for i in range(n):
+        p = WorkloadProfile(
+            name=f"app{i}",
+            flops=10 ** rng.uniform(9, 15),
+            hbm_bytes=10 ** rng.uniform(6, 12),
+            bytes_accessed=10 ** rng.uniform(6, 12),
+            collective_bytes={
+                "all-reduce": 10 ** rng.uniform(6, 12),
+                "all-gather": 10 ** rng.uniform(5, 11),
+            },
+            num_devices=rng.choice([1, 8, 256]),
+            model_flops=(10 ** rng.uniform(12, 18)
+                         if rng.random() < 0.8 else 0.0),
+        )
+        if i % 3 == 0:
+            p.pod_collective_bytes = 0.3 * p.total_collective_bytes
+        if i % 5 == 0:
+            p.hbm_bytes = 0.0  # exercise the bytes_accessed fallback
+        out.append(p)
+    return out
+
+
+def candidate_machines(n=24, seed=1):
+    return MachineBatch.concat(
+        MachineBatch.from_models(VARIANTS),
+        ParamSpace.default().sample(n, seed=seed))
+
+
+# --------------------------------------------------------------------------- #
+# batched vs scalar equivalence (the ISSUE's 1e-9 property)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("timing_model", ["serial", "overlap"])
+@pytest.mark.parametrize("clamp", [False, True])
+def test_batched_matches_scalar(timing_model, clamp):
+    profiles = random_profiles(6, seed=3)
+    machines = candidate_machines(24, seed=1)
+    res = batched_congruence(
+        profiles, machines, timing_model=timing_model, clamp=clamp)
+    for a, p in enumerate(profiles):
+        beta = default_beta(p, machines.model(0))
+        assert res.beta[a] == pytest.approx(beta, rel=RTOL)
+        for v in range(len(machines)):
+            rep = profile_congruence(
+                p, machines.model(v), beta=beta,
+                timing_model=timing_model, clamp=clamp)
+            assert res.gamma[a, v] == pytest.approx(rep.gamma, rel=RTOL)
+            for sub, alpha in rep.alphas.items():
+                assert res.alphas[sub][a, v] == pytest.approx(alpha, rel=RTOL)
+            for k, s in rep.scores.items():
+                assert res.scores[k][a, v] == pytest.approx(
+                    s, rel=RTOL, abs=RTOL)
+            assert res.aggregate[a, v] == pytest.approx(
+                rep.aggregate, rel=RTOL, abs=RTOL)
+
+
+def test_batched_step_time_matches_scalar():
+    profiles = random_profiles(5, seed=7)
+    machines = candidate_machines(16, seed=2)
+    for tm in ("serial", "overlap"):
+        t = batched_step_time(profiles, machines, timing_model=tm)
+        for a, p in enumerate(profiles):
+            for v in range(len(machines)):
+                assert t[a, v] == pytest.approx(
+                    step_time(p, machines.model(v), tm), rel=RTOL)
+
+
+def test_explicit_beta_forms():
+    profiles = random_profiles(4, seed=11)
+    machines = candidate_machines(8, seed=4)
+    scalar = batched_congruence(profiles, machines, beta=0.0)
+    assert np.all(scalar.beta == 0.0)
+    per_app = np.array([1e-4, 2e-4, 3e-4, 4e-4])
+    res = batched_congruence(profiles, machines, beta=per_app)
+    for a, p in enumerate(profiles):
+        rep = profile_congruence(p, machines.model(2), beta=per_app[a])
+        assert res.aggregate[a, 2] == pytest.approx(rep.aggregate, rel=RTOL)
+
+
+def test_degenerate_gamma_equals_beta_scores_zero():
+    p = random_profiles(1)[0]
+    machines = MachineBatch.from_models(VARIANTS)
+    gamma = step_time(p, VARIANTS[0])
+    res = batched_congruence([p], machines, beta=gamma)
+    for k in ("ICS", "HRCS", "LBCS"):
+        assert np.isfinite(res.scores[k][0, 0])
+    assert res.scores["ICS"][0, 0] == 0.0 or res.gamma[0, 0] != gamma
+
+
+# --------------------------------------------------------------------------- #
+# evaluate(): lazy table == eager table
+# --------------------------------------------------------------------------- #
+
+
+def test_evaluate_batched_equals_scalar_table():
+    profiles = random_profiles(5, seed=5)
+    suites = {"even": [p.name for p in profiles[::2]],
+              "odd": [p.name for p in profiles[1::2]]}
+    lazy = evaluate(profiles, suites=suites, method="batched")
+    eager = evaluate(profiles, suites=suites, method="scalar")
+    assert isinstance(lazy, LazyDseTable) and isinstance(eager, DseTable)
+    assert lazy.apps == eager.apps
+    assert lazy.variants == eager.variants
+    for app in eager.apps:
+        assert lazy.best_fit(app) == eager.best_fit(app)
+        for v in eager.variants:
+            assert lazy.cell(app, v).aggregate == pytest.approx(
+                eager.cell(app, v).aggregate, rel=RTOL, abs=RTOL)
+    for suite in suites:
+        for v in eager.variants:
+            assert lazy.suite_mean(suite, v) == pytest.approx(
+                eager.suite_mean(suite, v), rel=RTOL)
+        assert lazy.suite_best_fit(suite) == eager.suite_best_fit(suite)
+    assert lazy.overall_best_fit() == eager.overall_best_fit()
+    # identical rendering, including per-cell extended reports on demand
+    assert lazy.markdown() == eager.markdown()
+    assert lazy.radar_markdown() == eager.radar_markdown()
+    a, v = eager.apps[0], eager.variants[0]
+    assert (lazy.cell(a, v).report.extended.keys()
+            == eager.cell(a, v).report.extended.keys())
+
+
+def test_evaluate_default_is_batched_and_auto():
+    profiles = random_profiles(3, seed=9)
+    assert isinstance(evaluate(profiles), LazyDseTable)
+    assert isinstance(evaluate(profiles, method="auto"), LazyDseTable)
+    with pytest.raises(ValueError):
+        evaluate(profiles, method="bogus")
+
+
+def test_evaluate_accepts_machine_batch():
+    profiles = random_profiles(3, seed=13)
+    machines = ParamSpace.default().sample(10, seed=3)
+    lazy = evaluate(profiles, variants=machines)
+    eager = evaluate(profiles, variants=machines, method="scalar")
+    for app in eager.apps:
+        assert lazy.best_fit(app) == eager.best_fit(app)
+
+
+def test_lazy_cells_materialize_on_demand():
+    profiles = random_profiles(2, seed=15)
+    lazy = evaluate(profiles)
+    assert not lazy._cell_cache
+    c = lazy.cell(profiles[0].name, "baseline")
+    assert c.report.name == profiles[0].name
+    assert len(lazy._cell_cache) == 1
+    assert c is lazy.cell(profiles[0].name, "baseline")  # cached
+    assert len(lazy.cells) == len(profiles) * len(VARIANTS)
+
+
+# --------------------------------------------------------------------------- #
+# population generators
+# --------------------------------------------------------------------------- #
+
+
+def test_halton_is_low_discrepancy_and_deterministic():
+    pts = halton(256, 5, seed=0)
+    assert pts.shape == (256, 5)
+    assert np.all((pts >= 0.0) & (pts < 1.0))
+    # every dimension covers the unit interval reasonably evenly
+    for j in range(5):
+        hist, _ = np.histogram(pts[:, j], bins=8, range=(0, 1))
+        assert hist.min() >= 16  # perfectly uniform would be 32
+    assert np.array_equal(pts, halton(256, 5, seed=0))
+    assert not np.array_equal(pts, halton(256, 5, seed=1))
+
+
+def test_param_space_sample_bounds():
+    space = ParamSpace.default(span=4.0, max_links=8)
+    batch = space.sample(128, seed=2)
+    assert len(batch) == 128
+    for name, dim in space.dims.items():
+        vals = getattr(batch, name)
+        assert np.all(vals >= dim.lo) and np.all(vals <= dim.hi), name
+    assert np.array_equal(batch.ici_links, np.rint(batch.ici_links))
+    # unswept params pinned at nominal
+    assert np.all(batch.scale_compute == 1.0)
+
+
+def test_param_space_grid_cross_product():
+    space = ParamSpace.default()
+    batch = space.grid({"peak_flops": 3, "hbm_bw": 2, "ici_links": 4})
+    links = space.dims["ici_links"].points(4)
+    assert len(batch) == 3 * 2 * len(links)
+    assert len({(f, h, l) for f, h, l in
+                zip(batch.peak_flops, batch.hbm_bw, batch.ici_links)}) \
+        == len(batch)
+
+
+def test_dim_points_and_unit_mapping():
+    d = Dim(1.0, 100.0, log=True)
+    pts = d.points(3)
+    assert pts == pytest.approx([1.0, 10.0, 100.0])
+    di = Dim(1, 4, log=False, integer=True)
+    vals = di.from_unit(np.linspace(0.0, 0.999, 64))
+    assert set(vals) == {1.0, 2.0, 3.0, 4.0}
+
+
+def test_machine_batch_roundtrip():
+    batch = MachineBatch.from_models(VARIANTS)
+    for i, m in enumerate(VARIANTS):
+        back = batch.model(i)
+        assert back.name == m.name
+        assert back.peak_flops == m.peak_flops
+        assert back.hbm_bw == m.hbm_bw
+        assert back.ici_bw_total == m.ici_bw_total
+    assert batch.area()[0] == pytest.approx(1.0)  # baseline vs itself
+
+
+def test_profile_batch_mem_fallback():
+    p = random_profiles(1)[0]
+    p.hbm_bytes = 0.0
+    p.bytes_accessed = 123.0
+    pb = ProfileBatch.from_profiles([p])
+    assert pb.mem_bytes[0] == 123.0
+
+
+# --------------------------------------------------------------------------- #
+# extractions: best fit + Pareto front
+# --------------------------------------------------------------------------- #
+
+
+def test_pareto_front_has_no_dominated_point():
+    profiles = random_profiles(6, seed=21)
+    res = run_sweep(profiles, n=200, seed=4, include_named=VARIANTS)
+    area, agg = res.area(), res.aggregate_mean()
+    front = res.pareto_front()
+    assert front, "front must be non-empty"
+    assert area[front] == pytest.approx(sorted(area[front]))  # sorted by area
+    for i in front:
+        dominated = ((area <= area[i]) & (agg <= agg[i])
+                     & ((area < area[i]) | (agg < agg[i])))
+        assert not dominated.any(), f"front point {i} is dominated"
+    # the global congruence optimum is always on the front
+    assert int(np.argmin(agg)) in front
+
+
+def test_best_fit_matches_argmin():
+    profiles = random_profiles(4, seed=23)
+    res = batched_congruence(profiles, candidate_machines(12), clamp=True)
+    for a, p in enumerate(profiles):
+        v = int(np.argmin(res.aggregate[a]))
+        assert res.best_fit(p.name) == res.machines.names[v]
+
+
+def test_sweep_result_reports():
+    profiles = random_profiles(3, seed=25)
+    res = run_sweep(profiles, n=20, include_named=VARIANTS)
+    md = res.markdown(top_k=5)
+    assert "pareto front" in md and "mean aggregate" in md
+    blob = res.to_json(top_k=5)
+    assert blob["num_variants"] == 23
+    assert set(blob["best_fit"]) == {p.name for p in profiles}
+    assert len(blob["top_variants"]) == 5
+    import json
+    json.dumps(blob)  # fully serializable
