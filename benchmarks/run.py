@@ -14,8 +14,13 @@ tables to benchmarks/out/ (consumed by EXPERIMENTS.md).
                           reuses the compiled artifact; measured speedup vs
                           the compile it avoids.
   sweep_scaling        -- vectorized sweep-engine throughput (cells/second)
-                          at V in {3, 100, 1k, 10k} generated variants, plus
-                          the batched-vs-scalar speedup on 10 x 1k cells.
+                          at V in {3, 100, 1k, 10k} generated variants on
+                          both kernel backends (NumPy vs JAX, side by
+                          side), plus the batched-vs-scalar speedup on
+                          10 x 1k cells.
+  grad_codesign        -- jax.grad co-design: scalarized-objective descent
+                          from the named-variant seeds (steps/second and
+                          per-seed improvement).
 
 ``--smoke`` runs every benchmark on tiny synthetic inputs with a single
 repeat so CI can exercise the whole harness in seconds.
@@ -174,24 +179,29 @@ def sweep_scaling() -> None:
     """Tentpole scaling claim: batched DSE throughput at population scale.
 
     Times ``evaluate(method="batched")`` over 10 apps x V generated variants
-    for V in {3, 100, 1k, 10k} (cells/second), then the batched-vs-scalar
-    speedup at V=1000 -- the ISSUE's >=50x acceptance gate.
+    for V in {3, 100, 1k, 10k} (cells/second) on BOTH kernel backends
+    (NumPy eager vs JAX jitted, side by side), then the batched-vs-scalar
+    speedup at V=1000 -- PR 1's >=50x acceptance gate.
     """
     profiles = common.scaling_profiles(10)
     space = ParamSpace.default()
     sizes = (3, 50) if common.SMOKE else (3, 100, 1000, 10000)
+    backends = ("numpy", "jax")
     rows = []
+    table = None
     for v in sizes:
         machines = space.sample(v, seed=0)
-        us, table = common.timeit(
-            evaluate, profiles, variants=machines, method="batched",
-            repeat=1 if v >= 1000 else 3)
-        cells = len(profiles) * v
-        cells_per_s = cells / (us / 1e6)
-        common.emit(f"sweep/batched/V{v}", us / cells,
-                    f"cells={cells} cells_per_s={cells_per_s:.0f} "
-                    f"best={table.overall_best_fit()}")
-        rows.append((v, cells, cells_per_s))
+        rates = {}
+        for backend in backends:
+            us, table = common.timeit(
+                evaluate, profiles, variants=machines, method="batched",
+                backend=backend, repeat=1 if v >= 1000 else 3)
+            cells = len(profiles) * v
+            rates[backend] = cells / (us / 1e6)
+            common.emit(f"sweep/batched[{backend}]/V{v}", us / cells,
+                        f"cells={cells} cells_per_s={rates[backend]:.0f} "
+                        f"best={table.overall_best_fit()}")
+        rows.append((v, len(profiles) * v, rates["numpy"], rates["jax"]))
 
     v_cmp = 50 if common.SMOKE else 1000
     machines = space.sample(v_cmp, seed=0)
@@ -205,11 +215,36 @@ def sweep_scaling() -> None:
                 f"speedup={speedup:.0f}x at V={v_cmp}")
 
     res = table_b.result
-    md = ["| V | cells | cells/s |", "|---|---|---|"]
-    md += [f"| {v} | {c} | {r:.0f} |" for v, c, r in rows]
-    md += ["", f"batched vs scalar at V={v_cmp}: {speedup:.0f}x", "",
+    md = ["| V | cells | numpy cells/s | jax cells/s |",
+          "|---|---|---|---|"]
+    md += [f"| {v} | {c} | {rn:.0f} | {rj:.0f} |" for v, c, rn, rj in rows]
+    md += ["", f"batched vs scalar at V={v_cmp}: {speedup:.0f}x",
+           "(jax timings include jit-compile amortization at small V; "
+           "the crossover vs NumPy moves with population size)", "",
            res.markdown(top_k=10)]
     common.write_out("sweep_scaling.md", "\n".join(md))
+
+
+def grad_codesign_bench() -> None:
+    """Gradient co-design throughput + improvement from the named seeds."""
+    from repro.core import VARIANTS as SEEDS
+    from repro.core.codesign import grad_codesign
+    from repro.core.sweep import MachineBatch
+
+    profiles = common.profiles_or_synthetic()[0]
+    steps = 10 if common.SMOKE else 100
+    us, res = common.timeit(
+        grad_codesign, profiles, MachineBatch.from_models(SEEDS),
+        steps=steps, repeat=1)
+    for i, name in enumerate(res.names):
+        common.emit(f"grad/{name}", us / max(steps, 1),
+                    f"objective {res.objective_seed[i]:.4f} -> "
+                    f"{res.objective_final[i]:.4f} in {steps} steps")
+    common.write_out("grad_codesign.md", "\n".join(
+        ["| seed | J(seed) | J(final) | improvement |", "|---|---|---|---|"]
+        + [f"| {n} | {s:.4f} | {f:.4f} | {s - f:.4f} |"
+           for n, s, f in zip(res.names, res.objective_seed,
+                              res.objective_final)]))
 
 
 BENCHMARKS = {
@@ -219,17 +254,25 @@ BENCHMARKS = {
     "profiler_overhead": profiler_overhead,
     "perf_hillclimb": perf_hillclimb,
     "sweep_scaling": sweep_scaling,
+    "grad_codesign": grad_codesign_bench,
 }
 
 
 def main(argv=None) -> None:
+    import os
+
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny synthetic profiles, single repeat (CI mode)")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="default kernel backend for every benchmark "
+                         "(sweep_scaling always reports both side by side)")
     ap.add_argument("benchmarks", nargs="*", choices=[[], *BENCHMARKS],
                     help="subset to run (default: all)")
     args = ap.parse_args(argv)
     common.SMOKE = args.smoke
+    if args.backend:
+        os.environ["REPRO_SWEEP_BACKEND"] = args.backend
     print("name,us_per_call,derived")
     for name in (args.benchmarks or BENCHMARKS):
         BENCHMARKS[name]()

@@ -6,6 +6,19 @@ its best-fit architecture variant, plus a bottleneck-shift demonstration
 (Fig. 2): what happens to the congruence profile when you fix the dominant
 subsystem.
 
+All scoring flows through the backend-agnostic kernel layer
+(``repro.core.kernels_xp``): pass ``backend="jax"`` to ``evaluate`` /
+``run_sweep`` (or set ``REPRO_SWEEP_BACKEND=jax``) to jit the same math on
+device for large populations.  The final section shows the two co-design
+modes that build on it:
+
+  * multi-objective sweep -- ``run_sweep(...).pareto_front_3d()`` ranks
+    sampled designs on (aggregate congruence, silicon area, dynamic power)
+    via the configurable ``CostModel``;
+  * gradient descent -- ``grad_codesign`` differentiates the scalarized
+    objective through the jitted kernels (``jax.grad`` on machine
+    log-rates) and walks the named seeds downhill.
+
 Run:  PYTHONPATH=src:. python examples/dse_codesign.py
 (after ``python -m repro.launch.dryrun`` for real artifacts)
 """
@@ -15,7 +28,14 @@ import sys
 sys.path.insert(0, ".")  # for benchmarks.common when run from repo root
 
 from benchmarks import common  # noqa: E402
-from repro.core import TPU_V5E, evaluate, profile_congruence  # noqa: E402
+from repro.core import (  # noqa: E402
+    TPU_V5E,
+    VARIANTS,
+    evaluate,
+    grad_codesign,
+    profile_congruence,
+    run_sweep,
+)
 
 
 def main() -> None:
@@ -53,6 +73,22 @@ def main() -> None:
     rep2 = profile_congruence(p, fixed, clamp=True)
     print(f"  after 4x faster {inv[rep.dominant].value}: "
           f"dominant={rep2.dominant} scores={ {k: round(v,3) for k,v in rep2.scores.items()} }")
+
+    print("\n== multi-objective sweep: congruence x area x power ==")
+    res = run_sweep(profiles, n=512, include_named=VARIANTS)
+    area, power, agg = res.area(), res.power(), res.aggregate_mean()
+    for i in res.pareto_front_3d()[:8]:
+        print(f"{res.machines.names[i]:12s} aggregate={agg[i]:.3f} "
+              f"area={area[i]:.3f} power={power[i]:.3f}")
+
+    print("\n== gradient co-design (jax.grad through the shared kernels) ==")
+    from repro.core.sweep import MachineBatch
+    cd = grad_codesign(profiles, MachineBatch.from_models(VARIANTS), steps=60)
+    for n, js, jf in zip(cd.names, cd.objective_seed, cd.objective_final):
+        print(f"{n:12s} objective {js:.4f} -> {jf:.4f}")
+    best = cd.best_model()
+    print(f"best: {best.name} peak_flops={best.peak_flops:.3e} "
+          f"hbm_bw={best.hbm_bw:.3e} ici_bw={best.ici_bw:.3e}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ batched congruence engine, and dumps the best-fit variants + Pareto front
   PYTHONPATH=src:. python scripts/sweep.py --num 2048 --out sweep
   PYTHONPATH=src:. python scripts/sweep.py --mode grid --num 1024 \
       --format md --timing-model overlap
+  PYTHONPATH=src:. python scripts/sweep.py --num 100000 --backend jax
 
 Profiles come from ``benchmarks/artifacts/*.json`` (the dry-run outputs)
 when present, else the synthetic trio -- same policy as the benchmark
@@ -44,6 +45,10 @@ def main(argv=None) -> int:
                          "ideal-compute beta against the baseline variant")
     ap.add_argument("--timing-model", choices=("serial", "overlap"),
                     default="serial")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="kernel backend (default: $REPRO_SWEEP_BACKEND, "
+                         "then numpy); jax jits + device-places the "
+                         "batched kernels")
     ap.add_argument("--no-named", action="store_true",
                     help="do not prepend baseline/denser/densest")
     ap.add_argument("--top", type=int, default=16)
@@ -67,11 +72,14 @@ def main(argv=None) -> int:
         include_named=() if args.no_named else VARIANTS,
         beta=args.beta,
         timing_model=args.timing_model,
+        backend=args.backend,
     )
 
     print(f"swept {len(result.profiles)} apps x {len(result.machines)} "
-          f"variants{' (SYNTHETIC profiles)' if synthetic else ''}; "
-          f"pareto front: {len(result.pareto_front())} variants",
+          f"variants on the {result.backend} backend"
+          f"{' (SYNTHETIC profiles)' if synthetic else ''}; "
+          f"pareto front: {len(result.pareto_front())} variants "
+          f"(3-D: {len(result.pareto_front_3d())})",
           file=sys.stderr)
 
     blob = json.dumps(result.to_json(top_k=args.top), indent=1, sort_keys=True)

@@ -8,8 +8,12 @@ Public API:
   roofline.analyze                         -- three-term roofline reports
   dse.evaluate                             -- Table I-style variant sweeps
   sweep.ParamSpace / batched_congruence    -- vectorized population sweeps
+  kernels_xp.get_backend                   -- numpy/jax kernel backends
+  costmodel.CostModel                      -- area + power silicon proxies
+  codesign.grad_codesign                   -- jax.grad machine co-design
 """
 
+from repro.core.codesign import CodesignResult, grad_codesign, scalarized_objective
 from repro.core.congruence import (
     CongruenceReport,
     SCORE_NAMES,
@@ -17,6 +21,7 @@ from repro.core.congruence import (
     default_beta,
     profile_congruence,
 )
+from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
 from repro.core.costs import (
     COLLECTIVE_KINDS,
     HloStats,
@@ -25,6 +30,12 @@ from repro.core.costs import (
     profile_from_compiled,
 )
 from repro.core.dse import DseCell, DseTable, LazyDseTable, evaluate
+from repro.core.kernels_xp import (
+    Backend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.core.machine import (
     ALL_SUBSYSTEMS,
     IDEAL_EPS,

@@ -1,0 +1,265 @@
+"""Gradient-based machine co-design: ``jax.grad`` through the shared kernels.
+
+The sweep engine answers "which of these sampled designs fits best?"; this
+module answers the continuous version -- "in which direction should the
+design move?" -- by differentiating a scalarized multi-objective
+
+    J(m) = mean-over-apps aggregate congruence
+           + w_area * CostModel.area(m) + w_power * CostModel.power(m)
+
+with respect to the *log* of the provisioned rates (``peak_flops``,
+``hbm_bw``, ``ici_bw``, ``inter_pod_bw``).  Log-parameterization keeps the
+rates positive and makes one step a multiplicative change, matching how
+hardware design points actually move (2x the MXUs, 1.5x the HBM stacks).
+
+This is only possible because the timing/Eq. 1 math lives in ONE traceable
+place (``repro.core.kernels_xp``): the JAX backend evaluates the identical
+kernel the NumPy sweep runs, so the gradient descends the surface the sweep
+scores.  ``ici_links`` (integer) and the per-subsystem degradation
+``scale_*`` factors are held fixed at their seed values.
+
+The objective uses unclamped Eq. 1 scores: clamping to [0, 1] zeroes the
+gradient wherever a score saturates, which is exactly where a dominated
+subsystem most needs a push.  Descent uses per-variant backtracking (halve
+the step on failure, grow it on success), so every accepted update strictly
+decreases that variant's objective -- the acceptance property
+``tests/test_codesign.py`` pins.
+
+Entry points:
+  scalarized_objective -- evaluate J per variant (NumPy in, NumPy out)
+  grad_codesign        -- descend J from a MachineBatch seed; returns a
+                          ``CodesignResult`` with per-variant trajectories
+                          and the optimized ``MachineModel`` designs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import kernels_xp as K
+from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
+from repro.core.machine import MachineModel
+
+#: The machine constants the gradient may move, in theta column order.
+OPT_FIELDS = ("peak_flops", "hbm_bw", "ici_bw", "inter_pod_bw")
+
+
+def _as_batches(profiles, machines):
+    from repro.core.sweep import _as_machine_batch, _as_profile_batch
+    return _as_profile_batch(profiles), _as_machine_batch(machines)
+
+
+def _machine_arrays_from_theta(xp, theta, fixed: K.MachineArrays) -> K.MachineArrays:
+    """Rebuild ``MachineArrays`` with rates ``exp(theta)``, rest from seed."""
+    return K.MachineArrays(
+        peak_flops=xp.exp(theta[:, 0]),
+        hbm_bw=xp.exp(theta[:, 1]),
+        ici_bw=xp.exp(theta[:, 2]),
+        ici_links=fixed.ici_links,
+        inter_pod_bw=xp.exp(theta[:, 3]),
+        scale_compute=fixed.scale_compute,
+        scale_memory=fixed.scale_memory,
+        scale_interconnect=fixed.scale_interconnect,
+    )
+
+
+def _objective_terms(xp, p: K.ProfileArrays, m: K.MachineArrays, beta,
+                     timing_model: str, eps: float, cost_model: CostModel,
+                     w_area: float, w_power: float):
+    """Per-variant (V,) scalarized objective -- the traceable core."""
+    out = K.congruence_kernel(xp, p, m, beta, timing_model, eps, clamp=False)
+    fit = xp.mean(out.aggregate, axis=0)
+    return fit + w_area * cost_model.area(m) + w_power * cost_model.power(m)
+
+
+def scalarized_objective(
+    profiles,
+    machines,
+    *,
+    beta=None,
+    beta_ref: int = 0,
+    timing_model: str = "serial",
+    eps: float = K.IDEAL_EPS,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    w_area: float = 0.1,
+    w_power: float = 0.05,
+) -> np.ndarray:
+    """Evaluate J for every variant (NumPy reference; shape ``(V,)``).
+
+    Uses the same default-beta convention as ``batched_congruence``: when
+    ``beta`` is None the per-app target derives from variant ``beta_ref``.
+    """
+    pb, mb = _as_batches(profiles, machines)
+    be = K.get_backend("numpy")
+    if beta is None:
+        beta = be.default_beta(pb.arrays(), mb.select(beta_ref).arrays())
+    beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (len(pb),))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return _objective_terms(np, pb.arrays(), mb.arrays(), beta,
+                                timing_model, eps, cost_model,
+                                w_area, w_power)
+
+
+@dataclasses.dataclass
+class CodesignResult:
+    """Outcome of one gradient co-design run (all arrays per-variant)."""
+
+    names: List[str]
+    objective_seed: np.ndarray       # (V,) J at the seed designs
+    objective_final: np.ndarray      # (V,) J after descent
+    seed_params: List[Dict[str, float]]
+    final_params: List[Dict[str, float]]
+    trajectory: np.ndarray           # (steps+1, V) accepted J per step
+    steps: int
+    w_area: float
+    w_power: float
+
+    @property
+    def improvement(self) -> np.ndarray:
+        """Per-variant objective decrease (positive = better)."""
+        return self.objective_seed - self.objective_final
+
+    @property
+    def best(self) -> int:
+        return int(np.argmin(self.objective_final))
+
+    def best_model(self) -> MachineModel:
+        return self.models()[self.best]
+
+    def models(self) -> List[MachineModel]:
+        out = []
+        for name, params in zip(self.names, self.final_params):
+            out.append(MachineModel(
+                name=f"{name}+grad",
+                peak_flops=params["peak_flops"],
+                hbm_bw=params["hbm_bw"],
+                ici_bw=params["ici_bw"],
+                ici_links=int(round(params["ici_links"])),
+                inter_pod_bw=params["inter_pod_bw"],
+                scale={"compute": params["scale_compute"],
+                       "memory": params["scale_memory"],
+                       "interconnect": params["scale_interconnect"]},
+            ))
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "steps": self.steps,
+            "w_area": self.w_area,
+            "w_power": self.w_power,
+            "best_variant": f"{self.names[self.best]}+grad",
+            "variants": [
+                {"name": f"{n}+grad",
+                 "objective_seed": float(js),
+                 "objective_final": float(jf),
+                 "seed_params": sp,
+                 "final_params": fp}
+                for n, js, jf, sp, fp in zip(
+                    self.names, self.objective_seed, self.objective_final,
+                    self.seed_params, self.final_params)],
+        }
+
+
+def grad_codesign(
+    profiles,
+    machines,
+    *,
+    steps: int = 100,
+    lr: float = 0.1,
+    span: float = 16.0,
+    beta=None,
+    beta_ref: int = 0,
+    timing_model: str = "serial",
+    eps: float = K.IDEAL_EPS,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    w_area: float = 0.1,
+    w_power: float = 0.05,
+) -> CodesignResult:
+    """Descend J from a seed population by ``jax.grad`` on log-rates.
+
+    ``machines`` is the seed -- typically the named variants
+    (``MachineBatch.from_models(VARIANTS)``); every seed design descends
+    independently (the objective sums per-variant terms, so the gradient
+    does not couple them).  ``beta`` follows the sweep convention (per-app
+    default from variant ``beta_ref``, frozen during descent -- the paper's
+    beta is a user target, not a design variable).  ``span`` clips each
+    rate to [seed/span, seed*span], keeping designs inside a plausible
+    process envelope.  ``lr`` is the initial per-variant step on log-rates,
+    adapted by backtracking (x1.2 on success, x0.5 on failure), so the
+    accepted objective sequence is monotone non-increasing per variant.
+    """
+    backend = K.get_backend("jax")
+    jax, jnp = backend._jax, backend._jnp
+
+    pb, mb = _as_batches(profiles, machines)
+    fixed_np = mb.arrays()
+    if beta is None:
+        beta_np = K.get_backend("numpy").default_beta(
+            pb.arrays(), mb.select(beta_ref).arrays())
+    else:
+        beta_np = np.broadcast_to(
+            np.asarray(beta, dtype=np.float64), (len(pb),))
+
+    seed_rates = np.stack(
+        [np.asarray(getattr(mb, f), dtype=np.float64) for f in OPT_FIELDS],
+        axis=1)                                            # (V, 4)
+    theta0 = np.log(seed_rates)
+    lo, hi = theta0 - np.log(span), theta0 + np.log(span)
+
+    with backend._x64():
+        p_arrays = backend.profile_arrays(pb.arrays())
+        fixed = backend.machine_arrays(fixed_np)
+        beta_j = backend.asarray(beta_np)
+        lo_j, hi_j = backend.asarray(lo), backend.asarray(hi)
+
+        def per_variant(theta):
+            m = _machine_arrays_from_theta(jnp, theta, fixed)
+            return _objective_terms(jnp, p_arrays, m, beta_j, timing_model,
+                                    eps, cost_model, w_area, w_power)
+
+        obj_fn = jax.jit(per_variant)
+        grad_fn = jax.jit(jax.grad(lambda th: jnp.sum(per_variant(th))))
+
+        theta = backend.asarray(theta0)
+        f_cur = obj_fn(theta)
+        lr_v = jnp.full((theta.shape[0],), float(lr))
+        history = [backend.to_numpy(f_cur)]
+
+        for _ in range(steps):
+            g = grad_fn(theta)
+            cand = jnp.clip(theta - lr_v[:, None] * g, lo_j, hi_j)
+            f_new = obj_fn(cand)
+            ok = f_new < f_cur
+            theta = jnp.where(ok[:, None], cand, theta)
+            f_cur = jnp.where(ok, f_new, f_cur)
+            lr_v = jnp.where(ok, lr_v * 1.2, lr_v * 0.5)
+            history.append(backend.to_numpy(f_cur))
+
+        theta_np = backend.to_numpy(theta)
+        f_final = backend.to_numpy(f_cur)
+
+    final_rates = np.exp(theta_np)
+    f_seed = history[0]
+
+    def params_of(rates_row, i) -> Dict[str, float]:
+        d = {f: float(rates_row[j]) for j, f in enumerate(OPT_FIELDS)}
+        d["ici_links"] = float(fixed_np.ici_links[i])
+        d["scale_compute"] = float(fixed_np.scale_compute[i])
+        d["scale_memory"] = float(fixed_np.scale_memory[i])
+        d["scale_interconnect"] = float(fixed_np.scale_interconnect[i])
+        return d
+
+    return CodesignResult(
+        names=list(mb.names),
+        objective_seed=np.asarray(f_seed),
+        objective_final=np.asarray(f_final),
+        seed_params=[params_of(seed_rates[i], i) for i in range(len(mb))],
+        final_params=[params_of(final_rates[i], i) for i in range(len(mb))],
+        trajectory=np.stack(history, axis=0),
+        steps=steps,
+        w_area=w_area,
+        w_power=w_power,
+    )

@@ -12,14 +12,22 @@ Score -> 0: subsystem i barely affects the critical path.
 The aggregate application-architecture congruence score is the L2 magnitude
 of the (HRCS, LBCS, ICS) vector (paper §III-C), extensible to n dimensions;
 *lower* aggregate = smaller radar area = better overall fit.
+
+The Eq. 1 / roofline arithmetic lives in ``repro.core.kernels_xp`` (one
+backend-agnostic copy shared with the batched sweep engine); this module is
+the scalar adapter producing full per-cell ``CongruenceReport`` objects,
+including the per-component extended decomposition.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Optional
+from typing import Dict, Optional
 
+import numpy as np
+
+from repro.core import kernels_xp as K
 from repro.core.costs import COLLECTIVE_KINDS, WorkloadProfile
 from repro.core.machine import (
     ALL_SUBSYSTEMS,
@@ -27,7 +35,12 @@ from repro.core.machine import (
     MachineModel,
     Subsystem,
 )
-from repro.core.timing import TimingBreakdown, step_time, subsystem_times
+from repro.core.timing import (
+    TimingBreakdown,
+    machine_arrays,
+    profile_arrays,
+    subsystem_times,
+)
 
 # Paper score names keyed by the TPU subsystem they profile (DESIGN.md §2).
 SCORE_NAMES = {
@@ -98,7 +111,11 @@ class CongruenceReport:
         }
 
 
-def default_beta(profile: WorkloadProfile, machine: MachineModel) -> float:
+def default_beta(
+    profile: WorkloadProfile,
+    machine: MachineModel,
+    baseline: Optional[TimingBreakdown] = None,
+) -> float:
     """Default user target: the ideal-compute step time.
 
     The paper's beta is a user-defined target delay (0.2 ns in §III-C --
@@ -106,13 +123,19 @@ def default_beta(profile: WorkloadProfile, machine: MachineModel) -> float:
     ran useful model FLOPs at full MXU peak -- optimistic, nonzero, and
     workload-scaled.  Falls back to a small fraction of gamma when analytic
     model FLOPs are unavailable.
+
+    Callers that already hold the baseline ``TimingBreakdown`` (e.g.
+    ``profile_congruence``) pass it via ``baseline`` so the single timing
+    pass is shared instead of re-derived here.
     """
+    if baseline is None:
+        baseline = subsystem_times(profile, machine)
+    gamma = baseline.total_serial
     if profile.model_flops > 0 and profile.num_devices > 0:
         t = profile.model_flops / (profile.num_devices * machine.peak_flops)
-        gamma = step_time(profile, machine, "serial")
         # beta must sit below gamma for Eq. 1 to be meaningful.
         return min(t, 0.5 * gamma)
-    return 0.05 * step_time(profile, machine, "serial")
+    return 0.05 * gamma
 
 
 def profile_congruence(
@@ -127,27 +150,35 @@ def profile_congruence(
     """Compute ICS / HRCS / LBCS for one workload on one machine variant.
 
     This performs the paper's loop: one baseline timing (gamma), then one
-    re-timing per subsystem with that subsystem idealized (alpha_i).  The
-    compiled artifact is never touched -- only the machine model changes.
+    re-timing per subsystem with that subsystem idealized (alpha_i) -- all
+    through the shared ``kernels_xp.congruence_kernel`` at batch size 1.
+    The compiled artifact is never touched; only the machine model changes.
     """
     baseline = subsystem_times(profile, machine)
-    gamma = baseline.total(timing_model)
     if beta is None:
-        beta = default_beta(profile, machine)
+        beta = default_beta(profile, machine, baseline=baseline)
 
-    alphas: Dict[str, float] = {}
-    scores: Dict[str, float] = {}
-    for subsystem in ALL_SUBSYSTEMS:
-        ideal = machine.idealized(subsystem, eps=eps)
-        alpha = step_time(profile, ideal, timing_model)
-        score = congruence_score(alpha, gamma, beta)
-        if clamp:
-            score = min(1.0, max(0.0, score))
-        alphas[subsystem.value] = alpha
-        scores[SCORE_NAMES[subsystem]] = score
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = K.congruence_kernel(
+            np, profile_arrays(profile), machine_arrays(machine),
+            np.asarray([beta], dtype=np.float64),
+            timing_model, eps, clamp)
+
+    gamma = float(out.gamma[0, 0])
+    alphas = {
+        Subsystem.COMPUTE.value: float(out.alpha_compute[0, 0]),
+        Subsystem.MEMORY.value: float(out.alpha_memory[0, 0]),
+        Subsystem.INTERCONNECT.value: float(out.alpha_interconnect[0, 0]),
+    }
+    scores = {
+        "LBCS": float(out.lbcs[0, 0]),
+        "HRCS": float(out.hrcs[0, 0]),
+        "ICS": float(out.ics[0, 0]),
+    }
 
     extended = extended_decomposition(profile, machine, gamma=gamma, beta=beta,
-                                      timing_model=timing_model, eps=eps)
+                                      timing_model=timing_model, eps=eps,
+                                      clamp=clamp, times=baseline)
 
     return CongruenceReport(
         name=profile.name,
@@ -170,16 +201,26 @@ def extended_decomposition(
     beta: float,
     timing_model: str,
     eps: float = IDEAL_EPS,
+    clamp: bool = False,
+    times: Optional[TimingBreakdown] = None,
 ) -> Dict[str, float]:
     """Per-component congruence (paper §II-B: 'the methodology can be extended
     to separately evaluate each component type').
 
     ICS decomposes per collective kind; LBCS into MXU (dot) vs VPU
     (everything else).  Each sub-score idealizes only that component's share
-    of its subsystem's time, via linearity of the timing model.
+    of its subsystem's time, via linearity of the timing model.  ``clamp``
+    applies the same [0, 1] clip as the top-level scores, so a clamped
+    report is clamped throughout.  Callers already holding the baseline
+    ``TimingBreakdown`` pass it via ``times`` to skip the re-timing.
     """
     out: Dict[str, float] = {}
-    times = subsystem_times(profile, machine)
+    if times is None:
+        times = subsystem_times(profile, machine)
+
+    def score(alpha: float) -> float:
+        s = congruence_score(alpha, gamma, beta)
+        return min(1.0, max(0.0, s)) if clamp else s
 
     # --- ICS per collective kind ------------------------------------- #
     total_coll = profile.total_collective_bytes
@@ -188,7 +229,7 @@ def extended_decomposition(
             frac = profile.collective_bytes.get(kind, 0.0) / total_coll
             removed = times.interconnect * frac * (1.0 - eps)
             alpha = _retime_minus(times, timing_model, Subsystem.INTERCONNECT, removed)
-            out[f"ICS[{kind}]"] = congruence_score(alpha, gamma, beta)
+            out[f"ICS[{kind}]"] = score(alpha)
 
     # --- LBCS: MXU vs VPU --------------------------------------------- #
     if profile.flops > 0 and times.compute > 0:
@@ -196,7 +237,7 @@ def extended_decomposition(
         for label, frac in (("mxu", mxu_frac), ("vpu", 1.0 - mxu_frac)):
             removed = times.compute * frac * (1.0 - eps)
             alpha = _retime_minus(times, timing_model, Subsystem.COMPUTE, removed)
-            out[f"LBCS[{label}]"] = congruence_score(alpha, gamma, beta)
+            out[f"LBCS[{label}]"] = score(alpha)
 
     return out
 
@@ -211,6 +252,6 @@ def _retime_minus(
         Subsystem.INTERCONNECT: times.interconnect,
     }
     terms[subsystem] = max(0.0, terms[subsystem] - removed)
-    if timing_model == "serial":
-        return sum(terms.values())
-    return max(terms.values())
+    return float(K.combine(
+        np, terms[Subsystem.COMPUTE], terms[Subsystem.MEMORY],
+        terms[Subsystem.INTERCONNECT], timing_model))

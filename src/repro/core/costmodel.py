@@ -1,0 +1,103 @@
+"""Silicon cost layer: per-subsystem area weights + a dynamic-power term.
+
+PR 1's area proxy was a hardcoded mean of the four provisioned rates.  This
+promotes it into a configurable ``CostModel`` -- the PPA axes the paper
+trades congruence against when raising DSP/BRAM density (§I) -- so sweeps
+can rank variants on a *three*-objective front: (aggregate congruence,
+area, power).
+
+Both estimators are deliberately coarse, first-order proxies (this is
+*early* design exploration -- the paper's whole premise is ranking designs
+before committing to implementation):
+
+  area(m)  = sum_i w_i * rate_i / ref_rate_i          (weights sum to 1)
+  power(m) = static + sum_i p_i * (rate_i / ref_rate_i) ** e_i
+
+Area is linear in provisioned throughput (more MXUs / HBM stacks / SerDes
+lanes).  Power is superlinear for compute (e = 1.5 by default: rate gains
+come partly from frequency/voltage, which cost ~f*V^2) and linear for the
+bandwidth subsystems (mostly more parallel lanes at constant clock).  Delay
+``scale`` factors model degradation, not provisioned resources, so they
+enter neither estimator.
+
+Every method is plain arithmetic on duck-typed rate fields, so it accepts a
+``sweep.MachineBatch``, a ``kernels_xp.MachineArrays`` (NumPy *or* traced
+JAX -- the gradient co-design mode differentiates straight through it), or
+a scalar ``MachineModel``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.core.machine import MachineModel, TPU_V5E
+
+#: The provisioned rates that enter the cost model, in canonical order.
+#: Every accepted machine type (MachineModel, MachineBatch, MachineArrays)
+#: exposes all four as attributes, ici_bw_total included.
+RATE_FIELDS = ("peak_flops", "hbm_bw", "ici_bw_total", "inter_pod_bw")
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Relative silicon area + dynamic power estimators vs a reference chip.
+
+    ``area_weights`` are normalized to sum to 1 at evaluation time; the
+    default equal split reproduces PR 1's four-rate-mean proxy exactly, so
+    existing sweeps and Pareto fronts are unchanged.
+    """
+
+    reference: MachineModel = TPU_V5E
+    area_weights: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: {f: 1.0 for f in RATE_FIELDS})
+    power_weights: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: {f: 1.0 for f in RATE_FIELDS})
+    power_exponents: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: {"peak_flops": 1.5, "hbm_bw": 1.0,
+                                 "ici_bw_total": 1.0, "inter_pod_bw": 1.0})
+    static_power: float = 0.1
+
+    def __post_init__(self) -> None:
+        for mapping in (self.area_weights, self.power_weights,
+                        self.power_exponents):
+            for field in mapping:
+                if field not in RATE_FIELDS:
+                    raise KeyError(
+                        f"unknown rate field {field!r}; have {RATE_FIELDS}")
+        for name, mapping in (("area_weights", self.area_weights),
+                              ("power_weights", self.power_weights)):
+            if sum(mapping.get(f, 0.0) for f in RATE_FIELDS) <= 0.0:
+                raise ValueError(
+                    f"{name} must have a positive total over {RATE_FIELDS}")
+
+    # ------------------------------------------------------------------ #
+
+    def _norms(self, machines):
+        """Per-rate throughput normalized to the reference chip."""
+        return {f: getattr(machines, f) / getattr(self.reference, f)
+                for f in RATE_FIELDS}
+
+    def area(self, machines):
+        """Relative silicon/cost proxy (1.0 = the reference chip)."""
+        norms = self._norms(machines)
+        total_w = sum(self.area_weights.get(f, 0.0) for f in RATE_FIELDS)
+        return sum(self.area_weights.get(f, 0.0) * norms[f]
+                   for f in RATE_FIELDS) / total_w
+
+    def power(self, machines):
+        """Relative dynamic power proxy (1.0 + static at the reference)."""
+        norms = self._norms(machines)
+        total_w = sum(self.power_weights.get(f, 0.0) for f in RATE_FIELDS)
+        dyn = sum(self.power_weights.get(f, 0.0)
+                  * norms[f] ** self.power_exponents.get(f, 1.0)
+                  for f in RATE_FIELDS) / total_w
+        return self.static_power + dyn
+
+    def objectives(self, machines):
+        """(area, power) pair -- the two silicon axes of the 3-D front."""
+        return self.area(machines), self.power(machines)
+
+
+#: Default model: equal area weights (== PR 1's proxy), DVFS-flavored power.
+DEFAULT_COST_MODEL = CostModel()

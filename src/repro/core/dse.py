@@ -240,9 +240,11 @@ class LazyDseTable:
                   for s in ALL_SUBSYSTEMS}
         scores = {SCORE_NAMES[s]: float(res.scores[SCORE_NAMES[s]][a, v])
                   for s in ALL_SUBSYSTEMS}
+        baseline = subsystem_times(profile, machine)
         extended = extended_decomposition(
             profile, machine, gamma=gamma, beta=beta,
-            timing_model=res.timing_model, eps=res.eps)
+            timing_model=res.timing_model, eps=res.eps, clamp=res.clamp,
+            times=baseline)
         return CongruenceReport(
             name=profile.name,
             machine=machine.name,
@@ -252,7 +254,7 @@ class LazyDseTable:
             alphas=alphas,
             scores=scores,
             extended=extended,
-            baseline=subsystem_times(profile, machine),
+            baseline=baseline,
         )
 
     # --------------------------- aggregates --------------------------- #
@@ -314,6 +316,7 @@ def evaluate(
     beta: Optional[float] = None,
     clamp: bool = True,
     method: str = "auto",
+    backend: Optional[str] = None,
 ):
     """Score every (application x variant) cell.
 
@@ -324,8 +327,10 @@ def evaluate(
     ``sweep.MachineBatch`` (e.g. from ``ParamSpace.sample``).  ``method``
     selects the execution path: ``"batched"`` (vectorized, returns a
     ``LazyDseTable``), ``"scalar"`` (reference per-cell loop, returns an
-    eager ``DseTable``), or ``"auto"`` (batched).  Both paths agree to
-    ~1e-9 and expose the same table interface.
+    eager ``DseTable``), or ``"auto"`` (batched).  Both paths run the SAME
+    ``kernels_xp`` math (scalar = batch of size 1) and expose the same
+    table interface.  ``backend`` picks the kernel backend for the batched
+    path (``"numpy"``/``"jax"``; default resolves $REPRO_SWEEP_BACKEND).
     """
     from repro.core.sweep import MachineBatch, batched_congruence
 
@@ -340,7 +345,7 @@ def evaluate(
                     else MachineBatch.from_models(list(variants)))
         result = batched_congruence(
             profiles, machines, beta=beta, beta_ref=0,
-            timing_model=timing_model, clamp=clamp)
+            timing_model=timing_model, clamp=clamp, backend=backend)
         return LazyDseTable(result, dict(suites))
 
     if method != "scalar":

@@ -84,6 +84,24 @@ class MachineModel:
             new_scale[key] = float(value)
         return dataclasses.replace(self, scale=new_scale)
 
+    def with_rates(self, name: str = None, **rates: float) -> "MachineModel":
+        """Copy with replaced provisioned rates (the co-design knobs).
+
+        Valid keys: ``peak_flops``, ``hbm_bw``, ``ici_bw``, ``ici_links``,
+        ``inter_pod_bw``.  ``ici_links`` is rounded to an int; delay
+        ``scale`` factors are preserved (use ``with_scales`` for those).
+        """
+        allowed = ("peak_flops", "hbm_bw", "ici_bw", "ici_links",
+                   "inter_pod_bw")
+        for key in rates:
+            if key not in allowed:
+                raise KeyError(f"unknown rate {key!r}; have {allowed}")
+        if "ici_links" in rates:
+            rates["ici_links"] = int(round(rates["ici_links"]))
+        if name is not None:
+            rates["name"] = name
+        return dataclasses.replace(self, **rates)
+
     @property
     def ici_bw_total(self) -> float:
         return self.ici_bw * self.ici_links

@@ -21,40 +21,36 @@ Three layers:
   MachineBatch / ProfileBatch
                  -- struct-of-arrays packings of ``MachineModel`` /
                     ``WorkloadProfile`` (one float64 array per field).
-  batched_*      -- vectorized re-implementations of the scalar timing +
-                    congruence pipeline, numerically equivalent to the
-                    reference implementations to ~1e-9 (asserted in
-                    tests/test_sweep.py).
+  batched_*      -- thin wrappers over the backend-agnostic kernels in
+                    ``repro.core.kernels_xp`` (the SAME math the scalar
+                    path runs at batch size 1), evaluated on a selectable
+                    backend: ``"numpy"`` (default) or ``"jax"`` (jitted,
+                    device-placed, ~1e-12 from NumPy under x64).
 
-``SweepResult`` holds the full score tensor plus the two DSE extractions the
+``SweepResult`` holds the full score tensor plus the DSE extractions the
 paper's Table I points at: per-app best-fit variants (lowest aggregate =
-smallest radar area, §III-C) and the Pareto front of aggregate congruence
-vs. an area/cost proxy (the PPA trade-off axis of §I).
+smallest radar area, §III-C), the 2-D Pareto front of aggregate congruence
+vs. silicon area, and the 3-D front over (congruence, area, power) via the
+configurable ``repro.core.costmodel.CostModel`` (the PPA trade-off of §I).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core import kernels_xp as K
+from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
 from repro.core.costs import WorkloadProfile
 from repro.core.machine import (
-    ALL_SUBSYSTEMS,
     IDEAL_EPS,
     MachineModel,
     Subsystem,
     TPU_V5E,
 )
-
-# Score name per subsystem, kept in one canonical order everywhere.
-_SCORE_OF = {
-    Subsystem.COMPUTE: "LBCS",
-    Subsystem.MEMORY: "HRCS",
-    Subsystem.INTERCONNECT: "ICS",
-}
 
 # The machine-model constants a sweep may vary, in canonical order.
 SWEEP_PARAMS = (
@@ -303,19 +299,28 @@ class MachineBatch:
         return [self.model(i) for i in range(len(self))]
 
     def area(self, reference: MachineModel = TPU_V5E) -> np.ndarray:
-        """Relative silicon/cost proxy per variant.
+        """Relative silicon/cost proxy per variant (see ``CostModel.area``;
+        the default equal-weight model is used, matching the historical
+        four-rate-mean proxy exactly)."""
+        return CostModel(reference=reference).area(self)
 
-        Mean of the four provisioned rates normalized to ``reference`` --
-        the PPA "area" axis the paper trades congruence against when raising
-        DSP/BRAM density.  Delay ``scale`` factors model degradation, not
-        provisioned resources, so they do not enter the proxy.
-        """
-        return (
-            self.peak_flops / reference.peak_flops
-            + self.hbm_bw / reference.hbm_bw
-            + self.ici_bw_total / (reference.ici_bw * reference.ici_links)
-            + self.inter_pod_bw / reference.inter_pod_bw
-        ) / 4.0
+    def arrays(self) -> K.MachineArrays:
+        """The kernel-layer view: one ``MachineArrays`` namedtuple."""
+        return K.MachineArrays(
+            peak_flops=self.peak_flops,
+            hbm_bw=self.hbm_bw,
+            ici_bw=self.ici_bw,
+            ici_links=self.ici_links,
+            inter_pod_bw=self.inter_pod_bw,
+            scale_compute=self.scale_compute,
+            scale_memory=self.scale_memory,
+            scale_interconnect=self.scale_interconnect,
+        )
+
+    def select(self, i: int) -> "MachineBatch":
+        """Single-variant sub-batch (used as the default-beta reference)."""
+        sel = {name: getattr(self, name)[i:i + 1] for name in SWEEP_PARAMS}
+        return MachineBatch(names=[self.names[i]], **sel)
 
     def params_row(self, i: int) -> Dict[str, float]:
         return {name: float(getattr(self, name)[i]) for name in SWEEP_PARAMS}
@@ -361,6 +366,17 @@ class ProfileBatch:
             profiles=profiles,
         )
 
+    def arrays(self) -> K.ProfileArrays:
+        """The kernel-layer view: one ``ProfileArrays`` namedtuple."""
+        return K.ProfileArrays(
+            flops=self.flops,
+            mem_bytes=self.mem_bytes,
+            collective_bytes=self.collective_bytes,
+            pod_collective_bytes=self.pod_collective_bytes,
+            model_flops=self.model_flops,
+            num_devices=self.num_devices,
+        )
+
 
 def _as_profile_batch(profiles) -> ProfileBatch:
     if isinstance(profiles, ProfileBatch):
@@ -375,85 +391,23 @@ def _as_machine_batch(machines) -> MachineBatch:
 
 
 # --------------------------------------------------------------------------- #
-# Batched timing + congruence kernels
+# Batched timing + congruence -- thin wrappers over repro.core.kernels_xp
 # --------------------------------------------------------------------------- #
 
 
-def batched_raw_times(
-    profiles: ProfileBatch, machines: MachineBatch
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Unscaled per-subsystem roofline terms, each shaped ``(A, V)``.
-
-    Mirrors ``timing.subsystem_times`` with the per-subsystem delay scales
-    factored out, so idealization (replacing one scale with ``eps``) is a
-    multiply instead of a re-evaluation.
-    """
-    raw_c = profiles.flops[:, None] / machines.peak_flops[None, :]
-    raw_m = profiles.mem_bytes[:, None] / machines.hbm_bw[None, :]
-    ici_bytes = profiles.collective_bytes - profiles.pod_collective_bytes
-    t_ici = ici_bytes[:, None] / machines.ici_bw_total[None, :]
-    pod = profiles.pod_collective_bytes[:, None]
-    with np.errstate(divide="ignore", invalid="ignore"):
-        t_pod = np.where(pod != 0.0, pod / machines.inter_pod_bw[None, :], 0.0)
-    raw_i = t_ici + t_pod
-    return raw_c, raw_m, raw_i
-
-
-def _combine(tc: np.ndarray, tm: np.ndarray, ti: np.ndarray,
-             timing_model: str) -> np.ndarray:
-    if timing_model == "serial":
-        return tc + tm + ti
-    if timing_model == "overlap":
-        return np.maximum(np.maximum(tc, tm), ti)
-    raise ValueError(f"unknown timing model {timing_model!r}")
-
-
 def batched_step_time(
-    profiles, machines, timing_model: str = "serial"
+    profiles, machines, timing_model: str = "serial",
+    backend: Optional[str] = None,
 ) -> np.ndarray:
     """``(A, V)`` step-time matrix -- vectorized ``timing.step_time``."""
     pb, mb = _as_profile_batch(profiles), _as_machine_batch(machines)
-    raw_c, raw_m, raw_i = batched_raw_times(pb, mb)
-    return _combine(
-        mb.scale_compute[None, :] * raw_c,
-        mb.scale_memory[None, :] * raw_m,
-        mb.scale_interconnect[None, :] * raw_i,
-        timing_model,
-    )
-
-
-def batched_eq1(alpha: np.ndarray, gamma: np.ndarray,
-                beta: np.ndarray) -> np.ndarray:
-    """Eq. 1 over arrays, with the scalar path's gamma==beta degeneracy -> 0."""
-    denom = gamma - beta
-    safe = np.where(denom == 0.0, 1.0, denom)
-    return np.where(denom == 0.0, 0.0, 1.0 - (alpha - beta) / safe)
-
-
-def _default_beta_from_raw(
-    pb: ProfileBatch, mb: MachineBatch,
-    raw_c: np.ndarray, raw_m: np.ndarray, raw_i: np.ndarray,
-    beta_ref: int,
-) -> np.ndarray:
-    """Default-beta kernel over precomputed raw terms (one column's work)."""
-    gamma_ref = (
-        mb.scale_compute[beta_ref] * raw_c[:, beta_ref]
-        + mb.scale_memory[beta_ref] * raw_m[:, beta_ref]
-        + mb.scale_interconnect[beta_ref] * raw_i[:, beta_ref]
-    )
-    valid = (pb.model_flops > 0) & (pb.num_devices > 0)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        t_ideal = np.where(
-            valid,
-            pb.model_flops / (pb.num_devices * mb.peak_flops[beta_ref]),
-            np.inf,
-        )
-    return np.where(valid, np.minimum(t_ideal, 0.5 * gamma_ref),
-                    0.05 * gamma_ref)
+    be = K.get_backend(backend)
+    return be.to_numpy(be.step_time(pb.arrays(), mb.arrays(), timing_model))
 
 
 def default_beta_batched(
-    profiles, machines, beta_ref: int = 0
+    profiles, machines, beta_ref: int = 0,
+    backend: Optional[str] = None,
 ) -> np.ndarray:
     """Vectorized ``congruence.default_beta`` against variant ``beta_ref``.
 
@@ -463,8 +417,9 @@ def default_beta_batched(
     first ("baseline") column, matching ``dse.evaluate``.
     """
     pb, mb = _as_profile_batch(profiles), _as_machine_batch(machines)
-    raw_c, raw_m, raw_i = batched_raw_times(pb, mb)
-    return _default_beta_from_raw(pb, mb, raw_c, raw_m, raw_i, beta_ref)
+    be = K.get_backend(backend)
+    return be.to_numpy(
+        be.default_beta(pb.arrays(), mb.select(beta_ref).arrays()))
 
 
 @dataclasses.dataclass
@@ -481,6 +436,7 @@ class SweepResult:
     alphas: Dict[str, np.ndarray]    # subsystem value -> (A, V)
     scores: Dict[str, np.ndarray]    # ICS/HRCS/LBCS -> (A, V)
     aggregate: np.ndarray            # (A, V) L2 magnitudes
+    backend: str = "numpy"           # kernel backend that produced the tensors
 
     # ------------------------------ lookups --------------------------- #
 
@@ -512,6 +468,10 @@ class SweepResult:
     def area(self, reference: MachineModel = TPU_V5E) -> np.ndarray:
         return self.machines.area(reference)
 
+    def power(self, cost_model: CostModel = DEFAULT_COST_MODEL) -> np.ndarray:
+        """Relative dynamic-power proxy per variant (``CostModel.power``)."""
+        return cost_model.power(self.machines)
+
     def pareto_front(self, reference: MachineModel = TPU_V5E) -> List[int]:
         """Variant indices on the (area, mean aggregate) Pareto front.
 
@@ -531,6 +491,35 @@ class SweepResult:
                 best = agg[i]
         return front
 
+    def pareto_front_3d(
+        self, cost_model: CostModel = DEFAULT_COST_MODEL
+    ) -> List[int]:
+        """Variant indices on the (mean aggregate, area, power) Pareto front.
+
+        All three objectives are minimized -- the full PPA trade-off of
+        paper §I, with congruence standing in for "performance fit".  The
+        lexicographic (area, power, aggregate) sort guarantees every
+        potential dominator of a point precedes it, so checking new points
+        against accepted front members is sufficient.  Returned sorted by
+        increasing area.
+        """
+        agg = self.aggregate_mean()
+        area = np.asarray(cost_model.area(self.machines))
+        power = np.asarray(cost_model.power(self.machines))
+        order = sorted(range(len(self.machines)),
+                       key=lambda i: (area[i], power[i], agg[i]))
+        front: List[int] = []
+        for i in order:
+            dominated = any(
+                area[j] <= area[i] and power[j] <= power[i]
+                and agg[j] <= agg[i]
+                and (area[j] < area[i] or power[j] < power[i]
+                     or agg[j] < agg[i])
+                for j in front)
+            if not dominated:
+                front.append(i)
+        return front
+
     def top_variants(self, k: int = 10) -> List[int]:
         """Variant indices with the lowest suite-mean aggregate."""
         order = np.argsort(self.aggregate_mean(), kind="stable")
@@ -538,25 +527,30 @@ class SweepResult:
 
     # ----------------------------- reports ---------------------------- #
 
-    def markdown(self, top_k: int = 10) -> str:
-        """Top-``top_k`` variants by suite-mean aggregate + the Pareto front."""
+    def markdown(self, top_k: int = 10,
+                 cost_model: CostModel = DEFAULT_COST_MODEL) -> str:
+        """Top-``top_k`` variants by suite-mean aggregate + both fronts."""
         area = self.area()
+        power = self.power(cost_model)
         agg = self.aggregate_mean()
         front = set(self.pareto_front())
+        front3 = self.pareto_front_3d(cost_model)
         best_counts = np.bincount(self.best_fit_indices(),
                                   minlength=len(self.machines))
         lines = [
             f"sweep: {len(self.profiles)} apps x {len(self.machines)} "
-            f"variants ({self.timing_model} timing)",
+            f"variants ({self.timing_model} timing, {self.backend} backend)",
             "",
-            "| variant | mean aggregate | area | best-fit apps | pareto | "
-            "peak_flops | hbm_bw | ici_bw x links | inter_pod_bw |",
-            "|---" * 9 + "|",
+            "| variant | mean aggregate | area | power | best-fit apps "
+            "| pareto | peak_flops | hbm_bw | ici_bw x links "
+            "| inter_pod_bw |",
+            "|---" * 10 + "|",
         ]
         for i in self.top_variants(top_k):
             m = self.machines
             lines.append(
                 f"| {m.names[i]} | {agg[i]:.4f} | {area[i]:.3f} "
+                f"| {power[i]:.3f} "
                 f"| {int(best_counts[i])} | {'*' if i in front else ''} "
                 f"| {m.peak_flops[i]:.3e} | {m.hbm_bw[i]:.3e} "
                 f"| {m.ici_bw[i]:.3e} x {int(m.ici_links[i])} "
@@ -566,12 +560,20 @@ class SweepResult:
             lines.append(
                 f"- {self.machines.names[i]}: area={area[i]:.3f} "
                 f"aggregate={agg[i]:.4f}")
+        lines += ["", f"3-D pareto front (congruence x area x power, "
+                      f"{len(front3)} variants, by area):", ""]
+        for i in front3:
+            lines.append(
+                f"- {self.machines.names[i]}: area={area[i]:.3f} "
+                f"power={power[i]:.3f} aggregate={agg[i]:.4f}")
         return "\n".join(lines)
 
-    def to_json(self, top_k: Optional[int] = None) -> dict:
+    def to_json(self, top_k: Optional[int] = None,
+                cost_model: CostModel = DEFAULT_COST_MODEL) -> dict:
         """JSON-serializable sweep summary (full score tensor omitted unless
         the sweep is small -- at 10k variants the matrix dwarfs the summary)."""
         area = self.area()
+        power = self.power(cost_model)
         agg = self.aggregate_mean()
         front = self.pareto_front()
         best_idx = self.best_fit_indices()
@@ -581,6 +583,7 @@ class SweepResult:
             "num_apps": len(self.profiles),
             "num_variants": len(self.machines),
             "timing_model": self.timing_model,
+            "backend": self.backend,
             "clamp": self.clamp,
             "apps": self.apps,
             "best_fit": {app: self.machines.names[int(best_idx[a])]
@@ -593,9 +596,17 @@ class SweepResult:
                  "mean_aggregate": float(agg[i]),
                  "params": self.machines.params_row(i)}
                 for i in front],
+            "pareto_front_3d": [
+                {"variant": self.machines.names[i],
+                 "area": float(area[i]),
+                 "power": float(power[i]),
+                 "mean_aggregate": float(agg[i]),
+                 "params": self.machines.params_row(i)}
+                for i in self.pareto_front_3d(cost_model)],
             "top_variants": [
                 {"variant": self.machines.names[i],
                  "area": float(area[i]),
+                 "power": float(power[i]),
                  "mean_aggregate": float(agg[i]),
                  "best_fit_apps": [
                      app for a, app in enumerate(self.apps)
@@ -618,52 +629,46 @@ def batched_congruence(
     timing_model: str = "serial",
     eps: float = IDEAL_EPS,
     clamp: bool = False,
+    backend: Optional[str] = None,
 ) -> SweepResult:
     """Vectorized ``profile_congruence`` over the full (apps x variants) grid.
 
-    One pass computes gamma, all three alphas, the Eq. 1 scores and the L2
-    aggregates as ``(A, V)`` arrays -- the paper's per-subsystem idealization
-    loop becomes three scale substitutions on precomputed raw terms.
+    One ``kernels_xp.congruence_kernel`` pass computes gamma, all three
+    alphas, the Eq. 1 scores and the L2 aggregates as ``(A, V)`` arrays --
+    the paper's per-subsystem idealization loop becomes three scale
+    substitutions on precomputed raw terms.
 
     ``beta`` may be None (per-app default derived from variant ``beta_ref``,
     matching ``dse.evaluate``), a scalar applied to every app, or an ``(A,)``
-    array of per-app targets.
+    array of per-app targets.  ``backend`` selects the kernel backend
+    (``"numpy"``/``"jax"``; default resolves $REPRO_SWEEP_BACKEND, then
+    numpy); the result tensors are always NumPy.
     """
     pb, mb = _as_profile_batch(profiles), _as_machine_batch(machines)
     if len(mb) == 0:
         raise ValueError("batched_congruence needs at least one machine variant")
-    raw_c, raw_m, raw_i = batched_raw_times(pb, mb)
-    scaled = {
-        Subsystem.COMPUTE: mb.scale_compute[None, :] * raw_c,
-        Subsystem.MEMORY: mb.scale_memory[None, :] * raw_m,
-        Subsystem.INTERCONNECT: mb.scale_interconnect[None, :] * raw_i,
-    }
-    gamma = _combine(scaled[Subsystem.COMPUTE], scaled[Subsystem.MEMORY],
-                     scaled[Subsystem.INTERCONNECT], timing_model)
+    be = K.get_backend(backend)
 
     if beta is None:
-        beta_vec = _default_beta_from_raw(pb, mb, raw_c, raw_m, raw_i,
-                                          beta_ref)
+        beta_vec = be.to_numpy(
+            be.default_beta(pb.arrays(), mb.select(beta_ref).arrays()))
     else:
         beta_vec = np.broadcast_to(
             np.asarray(beta, dtype=np.float64), (len(pb),)).copy()
-    beta_col = beta_vec[:, None]
 
-    alphas: Dict[str, np.ndarray] = {}
-    scores: Dict[str, np.ndarray] = {}
-    for subsystem, raw in zip(ALL_SUBSYSTEMS, (raw_c, raw_m, raw_i)):
-        terms = dict(scaled)
-        terms[subsystem] = eps * raw
-        alpha = _combine(terms[Subsystem.COMPUTE], terms[Subsystem.MEMORY],
-                         terms[Subsystem.INTERCONNECT], timing_model)
-        score = batched_eq1(alpha, gamma, beta_col)
-        if clamp:
-            score = np.clip(score, 0.0, 1.0)
-        alphas[subsystem.value] = alpha
-        scores[_SCORE_OF[subsystem]] = score
+    out = be.congruence(pb.arrays(), mb.arrays(), beta_vec,
+                        timing_model=timing_model, eps=eps, clamp=clamp)
 
-    aggregate = np.sqrt(
-        scores["ICS"] ** 2 + scores["HRCS"] ** 2 + scores["LBCS"] ** 2)
+    alphas = {
+        Subsystem.COMPUTE.value: be.to_numpy(out.alpha_compute),
+        Subsystem.MEMORY.value: be.to_numpy(out.alpha_memory),
+        Subsystem.INTERCONNECT.value: be.to_numpy(out.alpha_interconnect),
+    }
+    scores = {
+        "LBCS": be.to_numpy(out.lbcs),
+        "HRCS": be.to_numpy(out.hrcs),
+        "ICS": be.to_numpy(out.ics),
+    }
 
     return SweepResult(
         profiles=pb,
@@ -672,10 +677,11 @@ def batched_congruence(
         eps=eps,
         clamp=clamp,
         beta=beta_vec,
-        gamma=gamma,
+        gamma=be.to_numpy(out.gamma),
         alphas=alphas,
         scores=scores,
-        aggregate=aggregate,
+        aggregate=be.to_numpy(out.aggregate),
+        backend=be.name,
     )
 
 
@@ -691,6 +697,7 @@ def run_sweep(
     beta_machine: Optional[MachineModel] = None,
     timing_model: str = "serial",
     clamp: bool = True,
+    backend: Optional[str] = None,
 ) -> SweepResult:
     """One-call sweep: generate a population and score it.
 
@@ -717,6 +724,7 @@ def run_sweep(
         ref = beta_machine or (include_named[0] if include_named
                                else space.nominal)
         beta = default_beta_batched(
-            profiles, MachineBatch.from_models([ref]))
+            profiles, MachineBatch.from_models([ref]), backend=backend)
     return batched_congruence(
-        profiles, pop, beta=beta, timing_model=timing_model, clamp=clamp)
+        profiles, pop, beta=beta, timing_model=timing_model, clamp=clamp,
+        backend=backend)

@@ -12,6 +12,11 @@ Two timing models (DESIGN.md §2, adaptation note 1):
     full contribution.  Default for congruence scores.
   * ``overlap`` -- t = max(terms), the Roofline ideal with perfect
     compute/comm overlap.  Used for optimistic bounds in the DSE tables.
+
+The roofline arithmetic itself lives in ``repro.core.kernels_xp`` (one
+backend-agnostic copy shared with the batched sweep engine); this module is
+the scalar adapter -- it packs one (profile, machine) pair as a batch of
+size 1 and unpacks floats.
 """
 
 from __future__ import annotations
@@ -19,10 +24,43 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+import numpy as np
+
+from repro.core import kernels_xp as K
 from repro.core.costs import WorkloadProfile
 from repro.core.machine import ALL_SUBSYSTEMS, MachineModel, Subsystem
 
 TIMING_MODELS = ("serial", "overlap")
+
+
+def profile_arrays(profile: WorkloadProfile) -> K.ProfileArrays:
+    """Pack one profile as a batch-of-1 ``ProfileArrays`` (the scalar path's
+    ``hbm_bytes``-else-``bytes_accessed`` fallback applied here)."""
+    mem = profile.hbm_bytes if profile.hbm_bytes > 0 else profile.bytes_accessed
+    arr = lambda v: np.asarray([v], dtype=np.float64)
+    return K.ProfileArrays(
+        flops=arr(profile.flops),
+        mem_bytes=arr(mem),
+        collective_bytes=arr(profile.total_collective_bytes),
+        pod_collective_bytes=arr(profile.pod_collective_bytes),
+        model_flops=arr(profile.model_flops),
+        num_devices=arr(profile.num_devices),
+    )
+
+
+def machine_arrays(machine: MachineModel) -> K.MachineArrays:
+    """Pack one machine model as a batch-of-1 ``MachineArrays``."""
+    arr = lambda v: np.asarray([v], dtype=np.float64)
+    return K.MachineArrays(
+        peak_flops=arr(machine.peak_flops),
+        hbm_bw=arr(machine.hbm_bw),
+        ici_bw=arr(machine.ici_bw),
+        ici_links=arr(machine.ici_links),
+        inter_pod_bw=arr(machine.inter_pod_bw),
+        scale_compute=arr(machine.scale_for(Subsystem.COMPUTE)),
+        scale_memory=arr(machine.scale_for(Subsystem.MEMORY)),
+        scale_interconnect=arr(machine.scale_for(Subsystem.INTERCONNECT)),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,38 +102,20 @@ class TimingBreakdown:
 
 
 def subsystem_times(profile: WorkloadProfile, machine: MachineModel) -> TimingBreakdown:
-    """The three roofline terms under ``machine``'s (possibly idealized) scales.
-
-    compute      = per-device HLO FLOPs / peak FLOP/s
-    memory       = per-device HLO bytes / HBM BW
-    interconnect = per-device collective bytes / ICI BW, with traffic that
-                   crosses the pod axis charged at the slower inter-pod rate.
-    """
-    s_c = machine.scale_for(Subsystem.COMPUTE)
-    s_m = machine.scale_for(Subsystem.MEMORY)
-    s_i = machine.scale_for(Subsystem.INTERCONNECT)
-
-    t_compute = s_c * profile.flops / machine.peak_flops
-    mem_bytes = profile.hbm_bytes if profile.hbm_bytes > 0 else profile.bytes_accessed
-    t_memory = s_m * mem_bytes / machine.hbm_bw
-
-    ici_bytes = profile.total_collective_bytes - profile.pod_collective_bytes
-    t_ici = ici_bytes / machine.ici_bw_total
-    t_pod = (
-        profile.pod_collective_bytes / machine.inter_pod_bw
-        if profile.pod_collective_bytes
-        else 0.0
-    )
-    t_interconnect = s_i * (t_ici + t_pod)
-
-    total_serial = t_compute + t_memory + t_interconnect
-    total_overlap = max(t_compute, t_memory, t_interconnect)
+    """The three roofline terms under ``machine``'s (possibly idealized)
+    scales -- the shared ``kernels_xp`` math at batch size 1."""
+    with np.errstate(divide="ignore", invalid="ignore"):
+        tc, tm, ti = K.scaled_times(
+            np, profile_arrays(profile), machine_arrays(machine))
+    t_compute = float(tc[0, 0])
+    t_memory = float(tm[0, 0])
+    t_interconnect = float(ti[0, 0])
     return TimingBreakdown(
         compute=t_compute,
         memory=t_memory,
         interconnect=t_interconnect,
-        total_serial=total_serial,
-        total_overlap=total_overlap,
+        total_serial=t_compute + t_memory + t_interconnect,
+        total_overlap=max(t_compute, t_memory, t_interconnect),
     )
 
 

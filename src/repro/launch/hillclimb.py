@@ -19,7 +19,16 @@ backward recomputation is already covered by the remat-full baseline).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.hillclimb --arch chatglm3-6b \
-      --shape train_4k [--mesh pod] [--moe-impl capacity] --out DIR
+      --shape train_4k [--mesh pod] [--moe-impl capacity] --out DIR \
+      [--sweep N [--backend jax]] [--grad STEPS]
+
+Co-design modes (after the kernel substitution):
+  --sweep N      score N generated machine variants (batched kernels,
+                 --backend numpy|jax) and report best fit + Pareto front.
+  --grad STEPS   continuous co-design: jax.grad of the scalarized
+                 (congruence, area, power) objective through the shared
+                 kernels_xp layer, descending machine log-rates from the
+                 named-variant seeds.
 """
 
 import argparse
@@ -124,17 +133,20 @@ def machine_candidates(n: int, seed: int = 0):
         ParamSpace.default().sample(n, seed=seed))
 
 
-def codesign_sweep(profile, n: int, seed: int = 0) -> dict:
+def codesign_sweep(profile, n: int, seed: int = 0,
+                   backend: str = None) -> dict:
     """Score one profile against a sweep population and summarize the
     co-design answer: best-fit variant + (area, congruence) Pareto front."""
     from repro.core.sweep import batched_congruence
 
     machines = machine_candidates(n, seed=seed)
-    res = batched_congruence([profile], machines, clamp=True)
+    res = batched_congruence([profile], machines, clamp=True,
+                             backend=backend)
     best = int(res.best_fit_indices()[0])
     front = res.pareto_front()
     return {
         "num_variants": len(machines),
+        "backend": res.backend,
         "best_variant": machines.names[best],
         "best_aggregate": float(res.aggregate[0, best]),
         "best_params": machines.params_row(best),
@@ -144,6 +156,20 @@ def codesign_sweep(profile, n: int, seed: int = 0) -> dict:
              "aggregate": float(res.aggregate[0, i])}
             for i in front],
     }
+
+
+def codesign_grad(profile, steps: int, lr: float = 0.1) -> dict:
+    """Gradient co-design: descend the scalarized (congruence, area, power)
+    objective from the named-variant seeds by jax.grad through the shared
+    kernels (``repro.core.codesign``); the optimized continuous designs
+    answer "where should the machine move?" rather than "which sampled
+    point wins?"."""
+    from repro.core.codesign import grad_codesign
+    from repro.core.sweep import MachineBatch
+
+    res = grad_codesign([profile], MachineBatch.from_models(M.VARIANTS),
+                        steps=steps, lr=lr)
+    return res.to_json()
 
 
 def attention_layers(cfg) -> int:
@@ -173,6 +199,17 @@ def main(argv=None) -> int:
                     help="after substitution, sweep N generated machine "
                          "variants and report the best fit + Pareto front")
     ap.add_argument("--sweep-seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    choices=("numpy", "jax"),
+                    help="kernel backend for the co-design sweep "
+                         "(default: $REPRO_SWEEP_BACKEND, then numpy)")
+    ap.add_argument("--grad", type=int, default=0, metavar="STEPS",
+                    help="after substitution, gradient co-design: optimize "
+                         "machine log-rates from the named-variant seeds by "
+                         "jax.grad of the scalarized (congruence, area, "
+                         "power) objective for STEPS steps")
+    ap.add_argument("--grad-lr", type=float, default=0.1,
+                    help="initial log-rate step size for --grad")
     args = ap.parse_args(argv)
 
     cfg = C.get_config(args.arch)
@@ -230,12 +267,23 @@ def main(argv=None) -> int:
 
     if args.sweep > 0:
         # Co-design: which machine design fits the OPTIMIZED workload best?
-        cd = codesign_sweep(profile, args.sweep, seed=args.sweep_seed)
+        cd = codesign_sweep(profile, args.sweep, seed=args.sweep_seed,
+                            backend=args.backend)
         profile.meta["codesign_sweep"] = cd
-        print(f"codesign sweep over {cd['num_variants']} variants: "
-              f"best={cd['best_variant']} "
+        print(f"codesign sweep over {cd['num_variants']} variants "
+              f"({cd['backend']} backend): best={cd['best_variant']} "
               f"aggregate={cd['best_aggregate']:.4f} "
               f"pareto={len(cd['pareto'])} points")
+
+    if args.grad > 0:
+        # Continuous co-design: in which direction should the machine move?
+        gd = codesign_grad(profile, args.grad, lr=args.grad_lr)
+        profile.meta["grad_codesign"] = gd
+        lines = ", ".join(
+            f"{v['name']}: {v['objective_seed']:.4f}->"
+            f"{v['objective_final']:.4f}" for v in gd["variants"])
+        print(f"grad codesign ({gd['steps']} steps): {lines}; "
+              f"best={gd['best_variant']}")
 
     if args.out:
         os.makedirs(args.out, exist_ok=True)

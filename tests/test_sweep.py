@@ -13,6 +13,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    ALL_SUBSYSTEMS,
+    MachineModel,
     TPU_V5E,
     VARIANTS,
     WorkloadProfile,
@@ -30,7 +32,7 @@ from repro.core.sweep import (
     halton,
     run_sweep,
 )
-from repro.core.timing import step_time
+from repro.core.timing import step_time, subsystem_times
 
 RTOL = 1e-9
 
@@ -116,6 +118,59 @@ def test_explicit_beta_forms():
     for a, p in enumerate(profiles):
         rep = profile_congruence(p, machines.model(2), beta=per_app[a])
         assert res.aggregate[a, 2] == pytest.approx(rep.aggregate, rel=RTOL)
+
+
+@pytest.mark.parametrize("timing_model", ["serial", "overlap"])
+@pytest.mark.parametrize("beta_frac", [0.0, 0.5, 0.9, 2.0])
+@pytest.mark.parametrize("clamp", [False, True])
+def test_clamp_semantics_scalar_equals_batched(timing_model, beta_frac, clamp):
+    """Clamp pin (one kernel, one semantic): scalar and batched must agree
+    cell-for-cell for every clamp setting, including betas that push raw
+    Eq. 1 scores above 1 (beta between alpha and gamma) and below 0
+    (beta > gamma, negative denominator)."""
+    profiles = random_profiles(4, seed=31)
+    machines = candidate_machines(10, seed=6)
+    gamma0 = np.array([step_time(p, machines.model(0), timing_model)
+                       for p in profiles])
+    beta = beta_frac * gamma0
+    res = batched_congruence(profiles, machines, beta=beta,
+                             timing_model=timing_model, clamp=clamp)
+    saw_out_of_unit = False
+    for a, p in enumerate(profiles):
+        for v in range(len(machines)):
+            rep = profile_congruence(p, machines.model(v), beta=beta[a],
+                                     timing_model=timing_model, clamp=clamp)
+            for k, s in rep.scores.items():
+                if clamp:
+                    assert 0.0 <= s <= 1.0
+                elif s < 0.0 or s > 1.0:
+                    saw_out_of_unit = True
+                assert res.scores[k][a, v] == pytest.approx(
+                    s, rel=RTOL, abs=RTOL)
+            assert res.aggregate[a, v] == pytest.approx(
+                rep.aggregate, rel=RTOL, abs=RTOL)
+    if not clamp and beta_frac in (0.9, 2.0):
+        assert saw_out_of_unit, "fixture must exercise scores outside [0, 1]"
+
+
+def test_clamp_applies_to_extended_decomposition():
+    """A clamped report is clamped throughout, including §II-B sub-scores."""
+    p = random_profiles(1, seed=33)[0]
+    gamma = step_time(p, TPU_V5E)
+    rep = profile_congruence(p, TPU_V5E, beta=2.0 * gamma, clamp=True)
+    assert all(0.0 <= v <= 1.0 for v in rep.scores.values())
+    assert all(0.0 <= v <= 1.0 for v in rep.extended.values())
+    raw = profile_congruence(p, TPU_V5E, beta=2.0 * gamma, clamp=False)
+    assert any(v < 0.0 or v > 1.0 for v in raw.extended.values())
+
+
+def test_default_beta_accepts_threaded_baseline():
+    """Satellite fix: the baseline TimingBreakdown is shared, not recomputed
+    -- passing it explicitly must be an exact no-op."""
+    for p in random_profiles(4, seed=35):
+        baseline = subsystem_times(p, TPU_V5E)
+        assert default_beta(p, TPU_V5E, baseline=baseline) \
+            == default_beta(p, TPU_V5E)
 
 
 def test_degenerate_gamma_equals_beta_scores_zero():
@@ -284,14 +339,106 @@ def test_best_fit_matches_argmin():
         assert res.best_fit(p.name) == res.machines.names[v]
 
 
+def test_pareto_front_3d_has_no_dominated_point():
+    profiles = random_profiles(5, seed=27)
+    res = run_sweep(profiles, n=150, seed=6, include_named=VARIANTS)
+    agg = res.aggregate_mean()
+    area = np.asarray(res.area())
+    power = np.asarray(res.power())
+    front = res.pareto_front_3d()
+    assert front, "3-D front must be non-empty"
+    assert area[front] == pytest.approx(sorted(area[front]))
+    for i in front:
+        dominated = ((area <= area[i]) & (agg <= agg[i]) & (power <= power[i])
+                     & ((area < area[i]) | (agg < agg[i]) | (power < power[i])))
+        assert not dominated.any(), f"3-D front point {i} is dominated"
+    # every non-front point is dominated by someone (front completeness)
+    for i in set(range(len(res.machines))) - set(front):
+        dominated = ((area <= area[i]) & (agg <= agg[i]) & (power <= power[i])
+                     & ((area < area[i]) | (agg < agg[i]) | (power < power[i])))
+        assert dominated.any(), f"non-front point {i} is non-dominated"
+
+
 def test_sweep_result_reports():
     profiles = random_profiles(3, seed=25)
     res = run_sweep(profiles, n=20, include_named=VARIANTS)
     md = res.markdown(top_k=5)
     assert "pareto front" in md and "mean aggregate" in md
+    assert "power" in md and "3-D pareto front" in md
     blob = res.to_json(top_k=5)
     assert blob["num_variants"] == 23
     assert set(blob["best_fit"]) == {p.name for p in profiles}
     assert len(blob["top_variants"]) == 5
+    assert blob["backend"] in ("numpy", "jax")
+    assert blob["pareto_front_3d"], "3-D front serialized"
     import json
     json.dumps(blob)  # fully serializable
+
+
+# --------------------------------------------------------------------------- #
+# per-subsystem scale_* sweeps (degradation analysis)
+# --------------------------------------------------------------------------- #
+
+
+def scale_space(span=4.0):
+    """The ROADMAP's plumbed-but-unused degradation sweep: rate dims plus
+    the per-subsystem delay scale_* dims UNpinned."""
+    space = ParamSpace.default(span=span)
+    dims = dict(space.dims)
+    dims["scale_compute"] = Dim(0.25, 4.0)
+    dims["scale_memory"] = Dim(0.25, 4.0)
+    dims["scale_interconnect"] = Dim(0.25, 4.0)
+    return ParamSpace(dims=dims, nominal=space.nominal)
+
+
+def test_scale_dims_sample_and_vary():
+    batch = scale_space().sample(64, seed=8)
+    for name in ("scale_compute", "scale_memory", "scale_interconnect"):
+        vals = getattr(batch, name)
+        assert np.all((vals >= 0.25) & (vals <= 4.0))
+        assert len(np.unique(vals)) > 8, f"{name} must actually vary"
+
+
+@pytest.mark.parametrize("timing_model", ["serial", "overlap"])
+def test_scale_sweep_batched_matches_scalar(timing_model):
+    """Degradation sweep equivalence: with all scale_* dims unpinned, the
+    batched path must still match the scalar with_scales path to 1e-9."""
+    profiles = random_profiles(4, seed=41)
+    machines = scale_space().sample(16, seed=9)
+    res = batched_congruence(profiles, machines, timing_model=timing_model)
+    for a, p in enumerate(profiles):
+        beta = default_beta(p, machines.model(0))
+        for v in range(len(machines)):
+            m = machines.model(v)
+            # the materialized model carries the sampled non-default scales
+            scales = [m.scale_for(s) for s in ALL_SUBSYSTEMS]
+            assert any(abs(x - 1.0) > 1e-6 for x in scales)
+            rep = profile_congruence(p, m, beta=beta,
+                                     timing_model=timing_model)
+            assert res.gamma[a, v] == pytest.approx(rep.gamma, rel=RTOL)
+            for k, s in rep.scores.items():
+                assert res.scores[k][a, v] == pytest.approx(
+                    s, rel=RTOL, abs=RTOL)
+
+
+def test_machine_model_json_roundtrip_with_scales():
+    m = TPU_V5E.with_scales(compute=1.3, memory=0.7, interconnect=2.5)
+    back = MachineModel.from_json(m.to_json())
+    assert back == m
+    # and through a sampled batch: model(i) -> json -> model survives
+    batch = scale_space().sample(4, seed=10)
+    for i in range(len(batch)):
+        v = batch.model(i)
+        assert MachineModel.from_json(v.to_json()) == v
+
+
+def test_machine_model_with_rates():
+    m = TPU_V5E.with_scales(memory=0.7).with_rates(
+        name="tweaked", peak_flops=2 * TPU_V5E.peak_flops, ici_links=3.6)
+    assert m.name == "tweaked"
+    assert m.peak_flops == 2 * TPU_V5E.peak_flops
+    assert m.ici_links == 4  # rounded to int
+    assert m.hbm_bw == TPU_V5E.hbm_bw  # untouched rates preserved
+    assert m.scale["memory"] == 0.7    # scales preserved
+    with pytest.raises(KeyError):
+        TPU_V5E.with_rates(bogus=1.0)
