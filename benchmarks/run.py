@@ -15,9 +15,9 @@ tables to benchmarks/out/ (consumed by EXPERIMENTS.md).
                           the compile it avoids.
   sweep_scaling        -- vectorized sweep-engine throughput (cells/second)
                           at V in {3, 100, 1k, 10k} generated variants on
-                          both kernel backends (NumPy vs JAX, side by
-                          side), plus the batched-vs-scalar speedup on
-                          10 x 1k cells.
+                          all three kernel backends (NumPy vs JAX vs
+                          Pallas-fused, side by side), plus the
+                          batched-vs-scalar speedup on 10 x 1k cells.
   grad_codesign        -- jax.grad co-design: scalarized-objective descent
                           from the named-variant seeds (steps/second and
                           per-seed improvement).
@@ -179,14 +179,15 @@ def sweep_scaling() -> None:
     """Tentpole scaling claim: batched DSE throughput at population scale.
 
     Times ``evaluate(method="batched")`` over 10 apps x V generated variants
-    for V in {3, 100, 1k, 10k} (cells/second) on BOTH kernel backends
-    (NumPy eager vs JAX jitted, side by side), then the batched-vs-scalar
-    speedup at V=1000 -- PR 1's >=50x acceptance gate.
+    for V in {3, 100, 1k, 10k} (cells/second) on all THREE kernel backends
+    (NumPy eager vs JAX jitted vs the fused Pallas kernel -- interpreter
+    mode when no TPU is attached), then the batched-vs-scalar speedup at
+    V=1000 -- PR 1's >=50x acceptance gate.
     """
     profiles = common.scaling_profiles(10)
     space = ParamSpace.default()
     sizes = (3, 50) if common.SMOKE else (3, 100, 1000, 10000)
-    backends = ("numpy", "jax")
+    backends = ("numpy", "jax", "pallas")
     rows = []
     table = None
     for v in sizes:
@@ -201,7 +202,7 @@ def sweep_scaling() -> None:
             common.emit(f"sweep/batched[{backend}]/V{v}", us / cells,
                         f"cells={cells} cells_per_s={rates[backend]:.0f} "
                         f"best={table.overall_best_fit()}")
-        rows.append((v, len(profiles) * v, rates["numpy"], rates["jax"]))
+        rows.append((v, len(profiles) * v, rates))
 
     v_cmp = 50 if common.SMOKE else 1000
     machines = space.sample(v_cmp, seed=0)
@@ -214,13 +215,20 @@ def sweep_scaling() -> None:
                 f"batched_s={us_b / 1e6:.4f} scalar_s={us_s / 1e6:.3f} "
                 f"speedup={speedup:.0f}x at V={v_cmp}")
 
+    from repro.core import get_backend
+    pallas_mode = ("interpret" if get_backend("pallas").interpret
+                   else "compiled")
     res = table_b.result
-    md = ["| V | cells | numpy cells/s | jax cells/s |",
-          "|---|---|---|---|"]
-    md += [f"| {v} | {c} | {rn:.0f} | {rj:.0f} |" for v, c, rn, rj in rows]
+    md = [f"| V | cells | numpy cells/s | jax cells/s "
+          f"| pallas ({pallas_mode}) cells/s |",
+          "|---|---|---|---|---|"]
+    md += [f"| {v} | {c} | {r['numpy']:.0f} | {r['jax']:.0f} "
+           f"| {r['pallas']:.0f} |" for v, c, r in rows]
     md += ["", f"batched vs scalar at V={v_cmp}: {speedup:.0f}x",
            "(jax timings include jit-compile amortization at small V; "
-           "the crossover vs NumPy moves with population size)", "",
+           "the crossover vs NumPy moves with population size.  The pallas "
+           "column runs the fused kernel -- in interpreter mode it measures "
+           "correctness-path overhead, not TPU throughput)", "",
            res.markdown(top_k=10)]
     common.write_out("sweep_scaling.md", "\n".join(md))
 
@@ -264,12 +272,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny synthetic profiles, single repeat (CI mode)")
-    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+    ap.add_argument("--backend", default=None,
                     help="default kernel backend for every benchmark "
-                         "(sweep_scaling always reports both side by side)")
+                         "(numpy/jax/pallas or any registered name; "
+                         "sweep_scaling always reports all side by side)")
     ap.add_argument("benchmarks", nargs="*", choices=[[], *BENCHMARKS],
                     help="subset to run (default: all)")
     args = ap.parse_args(argv)
+    from repro.core.kernels_xp import validate_backend_arg
+    validate_backend_arg(ap, args.backend)
     common.SMOKE = args.smoke
     if args.backend:
         os.environ["REPRO_SWEEP_BACKEND"] = args.backend

@@ -9,6 +9,9 @@ batched congruence engine, and dumps the best-fit variants + Pareto front
   PYTHONPATH=src:. python scripts/sweep.py --mode grid --num 1024 \
       --format md --timing-model overlap
   PYTHONPATH=src:. python scripts/sweep.py --num 100000 --backend jax
+  PYTHONPATH=src:. python scripts/sweep.py --num 100000 --backend pallas
+  PYTHONPATH=src:. python scripts/sweep.py --num 1000000 --shards 8 \
+      --backend jax --format md
 
 Profiles come from ``benchmarks/artifacts/*.json`` (the dry-run outputs)
 when present, else the synthetic trio -- same policy as the benchmark
@@ -25,8 +28,9 @@ sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 from benchmarks import common  # noqa: E402
+from repro.core.kernels_xp import validate_backend_arg as validate_backend  # noqa: E402
 from repro.core.machine import TPU_V5E, VARIANTS  # noqa: E402
-from repro.core.sweep import ParamSpace, run_sweep  # noqa: E402
+from repro.core.sweep import ParamSpace, run_sweep, shard_sweep  # noqa: E402
 
 
 def main(argv=None) -> int:
@@ -45,10 +49,17 @@ def main(argv=None) -> int:
                          "ideal-compute beta against the baseline variant")
     ap.add_argument("--timing-model", choices=("serial", "overlap"),
                     default="serial")
-    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+    ap.add_argument("--backend", default=None,
                     help="kernel backend (default: $REPRO_SWEEP_BACKEND, "
-                         "then numpy); jax jits + device-places the "
-                         "batched kernels")
+                         "then numpy); 'jax' jits + device-places the "
+                         "batched kernels, 'pallas' runs the fused TPU "
+                         "kernel (interpreter mode off-TPU); any "
+                         "register_backend() name is accepted")
+    ap.add_argument("--shards", type=int, default=0, metavar="S",
+                    help="score the population in S shards (shard_sweep): "
+                         "mesh-sharded statistics + per-shard Pareto "
+                         "pre-filter, for populations that outgrow one "
+                         "device (0 = single-device run_sweep)")
     ap.add_argument("--no-named", action="store_true",
                     help="do not prepend baseline/denser/densest")
     ap.add_argument("--top", type=int, default=16)
@@ -59,12 +70,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.num < 1:
         ap.error("--num must be >= 1")
+    validate_backend(ap, args.backend)
 
     profiles, synthetic = common.profiles_or_synthetic(args.mesh)
     space = ParamSpace.default(nominal=TPU_V5E, span=args.span,
                                max_links=args.max_links)
-    result = run_sweep(
-        profiles,
+    sweep_kwargs = dict(
         space=space,
         n=args.num,
         mode=args.mode,
@@ -74,16 +85,34 @@ def main(argv=None) -> int:
         timing_model=args.timing_model,
         backend=args.backend,
     )
+    if args.shards > 0:
+        # keep_top must cover --top: each shard keeps its local top-k, so a
+        # smaller keep would silently prune global ranks out of the report.
+        sharded = shard_sweep(profiles, num_shards=args.shards,
+                              keep_top=max(16, args.top), **sweep_kwargs)
+        result = sharded.result
+        print(f"shard-swept {len(result.profiles)} apps x "
+              f"{sharded.num_variants} variants in {sharded.num_shards} "
+              f"shards ({sharded.mesh_axis}, {result.backend} backend"
+              f"{', SYNTHETIC profiles' if synthetic else ''}); "
+              f"{len(result.machines)} Pareto candidates kept; front: "
+              f"{len(sharded.pareto_front())} variants "
+              f"(3-D: {len(sharded.pareto_front_3d())})",
+              file=sys.stderr)
+        blob_source = sharded
+    else:
+        result = run_sweep(profiles, **sweep_kwargs)
+        print(f"swept {len(result.profiles)} apps x {len(result.machines)} "
+              f"variants on the {result.backend} backend"
+              f"{' (SYNTHETIC profiles)' if synthetic else ''}; "
+              f"pareto front: {len(result.pareto_front())} variants "
+              f"(3-D: {len(result.pareto_front_3d())})",
+              file=sys.stderr)
+        blob_source = result
 
-    print(f"swept {len(result.profiles)} apps x {len(result.machines)} "
-          f"variants on the {result.backend} backend"
-          f"{' (SYNTHETIC profiles)' if synthetic else ''}; "
-          f"pareto front: {len(result.pareto_front())} variants "
-          f"(3-D: {len(result.pareto_front_3d())})",
-          file=sys.stderr)
-
-    blob = json.dumps(result.to_json(top_k=args.top), indent=1, sort_keys=True)
-    md = result.markdown(top_k=args.top)
+    blob = json.dumps(blob_source.to_json(top_k=args.top), indent=1,
+                      sort_keys=True)
+    md = blob_source.markdown(top_k=args.top)
     if args.out is None:
         if args.format in ("json", "both"):
             print(blob)

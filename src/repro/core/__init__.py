@@ -8,9 +8,13 @@ Public API:
   roofline.analyze                         -- three-term roofline reports
   dse.evaluate                             -- Table I-style variant sweeps
   sweep.ParamSpace / batched_congruence    -- vectorized population sweeps
-  kernels_xp.get_backend                   -- numpy/jax kernel backends
+  sweep.run_sweep / shard_sweep            -- one-call + mesh-sharded sweeps
+  kernels_xp.get_backend                   -- numpy/jax/pallas kernel backends
   costmodel.CostModel                      -- area + power silicon proxies
   codesign.grad_codesign                   -- jax.grad machine co-design
+
+See docs/architecture.md for the layer map and docs/backends.md for the
+backend-authoring contract.
 """
 
 from repro.core.codesign import CodesignResult, grad_codesign, scalarized_objective
@@ -54,9 +58,11 @@ from repro.core.sweep import (
     MachineBatch,
     ParamSpace,
     ProfileBatch,
+    ShardedSweepResult,
     SweepResult,
     batched_congruence,
     batched_step_time,
     run_sweep,
+    shard_sweep,
 )
 from repro.core.timing import TimingBreakdown, step_time, subsystem_times

@@ -190,6 +190,21 @@ def grad_codesign(
     process envelope.  ``lr`` is the initial per-variant step on log-rates,
     adapted by backtracking (x1.2 on success, x0.5 on failure), so the
     accepted objective sequence is monotone non-increasing per variant.
+
+    Example (descend the three named seeds for a few steps):
+
+    >>> from repro.core import VARIANTS, WorkloadProfile, grad_codesign
+    >>> from repro.core.sweep import MachineBatch
+    >>> apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+    ...                         collective_bytes={"all-reduce": 2e10},
+    ...                         num_devices=256, model_flops=5e16)]
+    >>> cd = grad_codesign(apps, MachineBatch.from_models(VARIANTS), steps=3)
+    >>> cd.names
+    ['baseline', 'denser', 'densest']
+    >>> bool((cd.improvement >= 0).all())     # backtracking never regresses
+    True
+    >>> cd.best_model().peak_flops > 0
+    True
     """
     backend = K.get_backend("jax")
     jax, jnp = backend._jax, backend._jnp

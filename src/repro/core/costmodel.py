@@ -46,6 +46,21 @@ class CostModel:
     ``area_weights`` are normalized to sum to 1 at evaluation time; the
     default equal split reproduces PR 1's four-rate-mean proxy exactly, so
     existing sweeps and Pareto fronts are unchanged.
+
+    Example -- the reference chip costs 1.0 area and ``1.0 + static_power``
+    power by construction; reweighting changes variant rankings:
+
+    >>> from repro.core import CostModel, TPU_V5E
+    >>> cm = CostModel()
+    >>> round(float(cm.area(TPU_V5E)), 9)
+    1.0
+    >>> float(cm.power(TPU_V5E)) == 1.0 + cm.static_power
+    True
+    >>> compute_heavy = CostModel(area_weights={"peak_flops": 3.0,
+    ...                                         "hbm_bw": 1.0})
+    >>> denser = TPU_V5E.with_rates(name="2x", peak_flops=2 * TPU_V5E.peak_flops)
+    >>> float(compute_heavy.area(denser)) > float(cm.area(denser))
+    True
     """
 
     reference: MachineModel = TPU_V5E

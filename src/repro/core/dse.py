@@ -330,7 +330,23 @@ def evaluate(
     eager ``DseTable``), or ``"auto"`` (batched).  Both paths run the SAME
     ``kernels_xp`` math (scalar = batch of size 1) and expose the same
     table interface.  ``backend`` picks the kernel backend for the batched
-    path (``"numpy"``/``"jax"``; default resolves $REPRO_SWEEP_BACKEND).
+    path (``"numpy"``/``"jax"``/``"pallas"``; default resolves
+    $REPRO_SWEEP_BACKEND).
+
+    Example (synthetic profile against the paper's three named variants):
+
+    >>> from repro.core import WorkloadProfile, evaluate
+    >>> apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+    ...                         collective_bytes={"all-reduce": 2e10},
+    ...                         num_devices=256, model_flops=5e16)]
+    >>> table = evaluate(apps)          # batched path, LazyDseTable
+    >>> table.variants
+    ['baseline', 'denser', 'densest']
+    >>> table.best_fit("app0") in table.variants
+    True
+    >>> cell = table.cell("app0", "baseline")   # full report, lazily
+    >>> cell.aggregate == table._aggregate("app0", "baseline")
+    True
     """
     from repro.core.sweep import MachineBatch, batched_congruence
 

@@ -1,0 +1,279 @@
+"""Pallas-fused congruence backend -- the third registered kernel backend.
+
+The numpy and jax backends in ``repro.core.kernels_xp`` evaluate the
+congruence pipeline as a chain of whole-array ops: every intermediate
+(three raw roofline terms, three scaled terms, gamma, three idealized
+alphas) is its own ``(A, V)`` array, materialized in host RAM or HBM
+between steps.  At mega-sweep scale (V in the millions) that traffic, not
+the arithmetic, is the cost.
+
+This backend collapses the whole ``raw_times -> combine -> eq1 ->
+congruence`` chain into ONE ``pl.pallas_call``: the grid tiles the variant
+axis, each program pulls a ``(_M_ROWS, TILE_V)`` machine tile and the full
+``(_P_ROWS, A)`` profile stack into VMEM, computes every intermediate
+in-register/VMEM, and writes only the ``(_OUT_ROWS, A, TILE_V)`` result
+tile back out -- no intermediate ever touches HBM.
+
+Crucially the kernel BODY is not a new copy of the math: it calls the very
+same ``congruence_kernel`` / ``step_time_kernel`` / ``default_beta_kernel``
+functions from ``kernels_xp`` with ``xp = jax.numpy``, so the repo-wide
+"one copy of the Eq. 1 math" invariant survives.  Pallas contributes the
+fusion and tiling, not a re-derivation.
+
+Precision: TPUs have no f64, so this backend computes in float32.  The
+equivalence tests pin ``pallas == numpy`` to ~1e-3 (f32 epsilon amplified
+by the Eq. 1 cancellation ``(alpha - beta) / (gamma - beta)``) instead of
+the ~1e-12 the x64 jax backend achieves.
+
+Interpreter fallback: on any non-TPU platform (CPU CI included) the kernel
+runs under ``pallas_call(interpret=True)`` -- slower, but the same tiling
+and the same f32 math, so CI pins the exact code path that ships to TPU.
+Override with ``REPRO_PALLAS_INTERPRET=1`` / ``=0``.
+
+Importing this module registers the backend; ``kernels_xp.get_backend``
+also lazily imports it on first ``backend="pallas"`` request, so callers
+never need to import it explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.kernels_xp import (
+    Backend,
+    CongruenceArrays,
+    MachineArrays,
+    ProfileArrays,
+    congruence_kernel,
+    default_beta_kernel,
+    register_backend,
+    step_time_kernel,
+)
+from repro.core.machine import IDEAL_EPS
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+#: Variant-axis tile: one fused program scores (A, TILE_V) cells entirely
+#: in VMEM.  512 = 4 f32 sublane groups x 128 lanes; at 10 apps the full
+#: working set (7+8 input rows, 8 output rows x A) stays well under the
+#: ~16 MB VMEM budget.
+TILE_V = 512
+
+_P_ROWS = 7   # the 6 ProfileArrays fields + the (A,) beta target, stacked
+_M_ROWS = 8   # the 8 MachineArrays fields, stacked
+_OUT_ROWS = 8  # gamma, 3 alphas, LBCS/HRCS/ICS, aggregate
+
+_LANES = 128  # f32 lane width; the variant axis is padded to a multiple
+
+
+def _round_up(n: int, k: int) -> int:
+    return ((n + k - 1) // k) * k
+
+
+def _profile_rows(p_ref) -> ProfileArrays:
+    return ProfileArrays(*(p_ref[i] for i in range(6)))
+
+
+def _machine_rows(m_ref) -> MachineArrays:
+    return MachineArrays(*(m_ref[i] for i in range(_M_ROWS)))
+
+
+# --------------------------------------------------------------------------- #
+# Kernel bodies -- thin Ref plumbing around the shared kernels_xp math
+# --------------------------------------------------------------------------- #
+
+
+def _congruence_body(jnp, timing_model, eps, clamp, p_ref, m_ref, out_ref):
+    """Fused pass over one (A, TILE_V) tile: every intermediate stays in VMEM."""
+    out = congruence_kernel(jnp, _profile_rows(p_ref), _machine_rows(m_ref),
+                            p_ref[6], timing_model, eps, clamp)
+    out_ref[0] = out.gamma
+    out_ref[1] = out.alpha_compute
+    out_ref[2] = out.alpha_memory
+    out_ref[3] = out.alpha_interconnect
+    out_ref[4] = out.lbcs
+    out_ref[5] = out.hrcs
+    out_ref[6] = out.ics
+    out_ref[7] = out.aggregate
+
+
+def _step_time_body(jnp, timing_model, p_ref, m_ref, out_ref):
+    out_ref[...] = step_time_kernel(
+        jnp, _profile_rows(p_ref), _machine_rows(m_ref), timing_model)
+
+
+def _default_beta_body(jnp, p_ref, m_ref, out_ref):
+    out_ref[0] = default_beta_kernel(
+        jnp, _profile_rows(p_ref), _machine_rows(m_ref))
+
+
+# --------------------------------------------------------------------------- #
+# The backend
+# --------------------------------------------------------------------------- #
+
+
+class PallasBackend(Backend):
+    """Fused f32 Pallas evaluation, tiled over the variant axis.
+
+    ``interpret=None`` (the default) auto-selects: compiled on TPU,
+    interpreter mode everywhere else, overridable via
+    ``$REPRO_PALLAS_INTERPRET``.  ``tile_v`` is the variant tile per fused
+    program (clamped down for small populations; the variant axis is padded
+    with benign 1.0 columns to a tile multiple and sliced on the way out).
+    """
+
+    name = "pallas"
+    differentiable = False
+
+    def __init__(self, interpret: bool = None, tile_v: int = TILE_V):
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        self._jax, self._jnp, self._pl = jax, jnp, pl
+        if interpret is None:
+            env = os.environ.get(INTERPRET_ENV, "")
+            if env:
+                interpret = env.lower() not in ("0", "false", "no")
+            else:
+                interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        self.tile_v = int(tile_v)
+        self._jit_cache: Dict[str, Callable] = {}
+
+    # -- conversions ---------------------------------------------------- #
+
+    def asarray(self, a):
+        return self._jnp.asarray(a, dtype=self._jnp.float32)
+
+    def to_numpy(self, a) -> np.ndarray:
+        return np.asarray(a)
+
+    # -- packing -------------------------------------------------------- #
+
+    def _profile_stack(self, p: ProfileArrays, beta=None) -> np.ndarray:
+        """Stack profile fields (and optionally beta) into one f32 matrix."""
+        rows = list(p) + ([] if beta is None else [beta])
+        return np.stack([np.asarray(r, dtype=np.float32) for r in rows])
+
+    def _machine_stack(self, m: MachineArrays):
+        """``(_M_ROWS, V_pad)`` f32 stack, padded to a tile multiple.
+
+        Pad columns are all-1.0 machines: every rate and scale is positive,
+        so the padded cells compute garbage-but-finite values that the
+        output slice drops -- no NaN/inf ever enters the kernel.
+        """
+        stack = np.stack([np.asarray(f, dtype=np.float32) for f in m])
+        v = stack.shape[1]
+        tile = min(self.tile_v, _round_up(max(v, 1), _LANES))
+        v_pad = _round_up(max(v, 1), tile)
+        if v_pad != v:
+            pad = np.ones((_M_ROWS, v_pad - v), dtype=np.float32)
+            stack = np.concatenate([stack, pad], axis=1)
+        return stack, tile, v
+
+    # -- fused entry points --------------------------------------------- #
+
+    def _jitted(self, key: str, fn: Callable, static) -> Callable:
+        if key not in self._jit_cache:
+            self._jit_cache[key] = self._jax.jit(fn, static_argnames=static)
+        return self._jit_cache[key]
+
+    def _tiled_call(self, body, p_stack, m_stack, tile: int, out_rows: int):
+        """One fused ``pallas_call`` over the variant grid.
+
+        Shapes are static under jit, so the grid / specs are rebuilt only
+        on retrace.  ``out_rows == 0`` means a 2-D ``(A, V)`` output (step
+        time); otherwise the output is an ``(out_rows, A, V)`` stack.
+        """
+        pl = self._pl
+        p_rows, a = p_stack.shape
+        m_rows, v_pad = m_stack.shape
+        grid = (v_pad // tile,)
+        in_specs = [
+            pl.BlockSpec((p_rows, a), lambda i: (0, 0)),
+            pl.BlockSpec((m_rows, tile), lambda i: (0, i)),
+        ]
+        if out_rows:
+            out_shape = self._jax.ShapeDtypeStruct(
+                (out_rows, a, v_pad), self._jnp.float32)
+            out_specs = pl.BlockSpec((out_rows, a, tile), lambda i: (0, 0, i))
+        else:
+            out_shape = self._jax.ShapeDtypeStruct(
+                (a, v_pad), self._jnp.float32)
+            out_specs = pl.BlockSpec((a, tile), lambda i: (0, i))
+        return pl.pallas_call(
+            body,
+            out_shape=out_shape,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            interpret=self.interpret,
+        )(p_stack, m_stack)
+
+    def step_time(self, p, m, timing_model="serial"):
+        m_stack, tile, v = self._machine_stack(m)
+        fn = self._jitted(
+            "step_time",
+            lambda p_stack, m_stack, timing_model, tile: self._tiled_call(
+                functools.partial(_step_time_body, self._jnp, timing_model),
+                p_stack, m_stack, tile, 0),
+            ("timing_model", "tile"))
+        out = fn(self.asarray(self._profile_stack(p)), self.asarray(m_stack),
+                 timing_model=timing_model, tile=tile)
+        return self.to_numpy(out)[:, :v]
+
+    def default_beta(self, p, m_ref):
+        """Per-app beta via the same shared kernel, one ungridded call.
+
+        The reference is a single variant, so there is nothing to tile --
+        the whole (rows x 1) problem is one VMEM-resident program.
+        """
+        pl = self._pl
+        p_stack = self.asarray(self._profile_stack(p))
+        m_stack = self.asarray(
+            np.stack([np.asarray(f, dtype=np.float32) for f in m_ref]))
+        fn = self._jitted(
+            "default_beta",
+            lambda p_stack, m_stack: pl.pallas_call(
+                functools.partial(_default_beta_body, self._jnp),
+                out_shape=self._jax.ShapeDtypeStruct(
+                    (1, p_stack.shape[1]), self._jnp.float32),
+                interpret=self.interpret,
+            )(p_stack, m_stack),
+            ())
+        return self.to_numpy(fn(p_stack, m_stack))[0]
+
+    def congruence(self, p, m, beta, timing_model="serial",
+                   eps=IDEAL_EPS, clamp=False) -> CongruenceArrays:
+        m_stack, tile, v = self._machine_stack(m)
+        fn = self._jitted(
+            "congruence",
+            lambda p_stack, m_stack, timing_model, eps, clamp, tile:
+                self._tiled_call(
+                    functools.partial(_congruence_body, self._jnp,
+                                      timing_model, eps, clamp),
+                    p_stack, m_stack, tile, _OUT_ROWS),
+            ("timing_model", "eps", "clamp", "tile"))
+        out = fn(self.asarray(self._profile_stack(p, beta)),
+                 self.asarray(m_stack),
+                 timing_model=timing_model, eps=eps, clamp=clamp, tile=tile)
+        out = self.to_numpy(out)[:, :, :v]
+        return CongruenceArrays(
+            gamma=out[0],
+            beta=np.asarray(beta),
+            alpha_compute=out[1],
+            alpha_memory=out[2],
+            alpha_interconnect=out[3],
+            lbcs=out[4],
+            hrcs=out[5],
+            ics=out[6],
+            aggregate=out[7],
+        )
+
+
+register_backend("pallas", PallasBackend)

@@ -362,15 +362,38 @@ _BACKEND_FACTORIES: Dict[str, Callable[[], Backend]] = {
 }
 _BACKEND_CACHE: Dict[str, Backend] = {}
 
+#: Backends registered by a module that is only imported on first use, so
+#: ``import repro.core`` stays light.  The module's import must call
+#: ``register_backend`` under the same name.
+_LAZY_BACKENDS: Dict[str, str] = {
+    "pallas": "repro.core.kernels_pallas",
+}
+
 
 def register_backend(name: str, factory: Callable[[], Backend]) -> None:
-    """Register a new backend factory (e.g. a future Pallas-fused path)."""
+    """Register a new backend factory (see the Pallas-fused path in
+    ``repro.core.kernels_pallas`` for the worked example, and
+    ``docs/backends.md`` for the contract)."""
     _BACKEND_FACTORIES[name] = factory
     _BACKEND_CACHE.pop(name, None)
 
 
 def available_backends() -> Tuple[str, ...]:
-    return tuple(sorted(_BACKEND_FACTORIES))
+    """Every selectable backend name, lazily-registered ones included."""
+    return tuple(sorted(set(_BACKEND_FACTORIES) | set(_LAZY_BACKENDS)))
+
+
+def validate_backend_arg(parser, name: Optional[str]) -> None:
+    """argparse helper: reject an unknown ``--backend`` at parse time.
+
+    The registry is open (``register_backend``), so CLIs can't bake a
+    static ``choices=`` list; every CLI funnels through this one check so
+    a bogus name fails with the registry's current contents instead of
+    deep inside ``get_backend`` after expensive work.
+    """
+    if name is not None and name.lower() not in available_backends():
+        parser.error(f"unknown backend {name!r}; available: "
+                     f"{', '.join(available_backends())}")
 
 
 def get_backend(name: Optional[str] = None) -> Backend:
@@ -384,6 +407,10 @@ def get_backend(name: Optional[str] = None) -> Backend:
     if name is None:
         name = os.environ.get(DEFAULT_BACKEND_ENV, "") or "numpy"
     name = name.lower()
+    if name not in _BACKEND_FACTORIES and name in _LAZY_BACKENDS:
+        import importlib
+
+        importlib.import_module(_LAZY_BACKENDS[name])
     if name not in _BACKEND_FACTORIES:
         raise ValueError(
             f"unknown backend {name!r}; have {available_backends()}")

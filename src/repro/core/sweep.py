@@ -37,8 +37,9 @@ configurable ``repro.core.costmodel.CostModel`` (the PPA trade-off of §I).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
-from typing import Dict, List, Mapping, Optional, Sequence, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -146,6 +147,21 @@ class ParamSpace:
 
     ``dims`` maps a subset of ``SWEEP_PARAMS`` to ``Dim`` ranges; parameters
     not present stay pinned at the nominal machine's value.
+
+    Example -- the default space sweeps every rate 4x below/above the
+    nominal chip and generates populations by Halton sampling or full grid:
+
+    >>> from repro.core import ParamSpace
+    >>> space = ParamSpace.default(span=2.0, max_links=4)
+    >>> pop = space.sample(8, seed=0)            # low-discrepancy draw
+    >>> len(pop)
+    8
+    >>> d = space.dims["peak_flops"]
+    >>> bool((pop.peak_flops >= d.lo).all() and (pop.peak_flops <= d.hi).all())
+    True
+    >>> grid = space.grid({"peak_flops": 3, "ici_links": 2})
+    >>> len(grid)                                # 3 x 2 cross-product
+    6
     """
 
     dims: Dict[str, Dim]
@@ -278,6 +294,17 @@ class MachineBatch:
             scale_memory=cat(lambda b: b.scale_memory),
             scale_interconnect=cat(lambda b: b.scale_interconnect),
         )
+
+    def slice(self, lo: int, hi: int) -> "MachineBatch":
+        """Contiguous sub-batch ``[lo, hi)`` (one shard of a sharded sweep)."""
+        sel = {name: getattr(self, name)[lo:hi] for name in SWEEP_PARAMS}
+        return MachineBatch(names=self.names[lo:hi], **sel)
+
+    def take(self, indices) -> "MachineBatch":
+        """Arbitrary sub-batch by variant index (Pareto-survivor gathers)."""
+        idx = np.asarray(indices, dtype=np.int64)
+        sel = {name: getattr(self, name)[idx] for name in SWEEP_PARAMS}
+        return MachineBatch(names=[self.names[i] for i in idx], **sel)
 
     def model(self, i: int) -> MachineModel:
         """Materialize variant ``i`` as a scalar ``MachineModel``."""
@@ -422,6 +449,52 @@ def default_beta_batched(
         be.default_beta(pb.arrays(), mb.select(beta_ref).arrays()))
 
 
+def pareto_front_indices(area, aggregate) -> List[int]:
+    """Indices on the 2-D (area, aggregate) Pareto front, both minimized.
+
+    Sorted by increasing area; a point is admitted only when it strictly
+    improves the best aggregate seen so far, so no returned point is
+    dominated by any input point.  Shared by ``SweepResult.pareto_front``
+    and the per-shard pre-filter in ``shard_sweep``.
+    """
+    area = np.asarray(area)
+    aggregate = np.asarray(aggregate)
+    order = sorted(range(len(area)), key=lambda i: (area[i], aggregate[i]))
+    front: List[int] = []
+    best = np.inf
+    for i in order:
+        if aggregate[i] < best:
+            front.append(i)
+            best = aggregate[i]
+    return front
+
+
+def pareto_front_indices_3d(aggregate, area, power) -> List[int]:
+    """Indices on the 3-D (aggregate, area, power) front, all minimized.
+
+    The lexicographic (area, power, aggregate) sort guarantees every
+    potential dominator of a point precedes it, so checking new points
+    against accepted front members is sufficient.  Sorted by increasing
+    area.
+    """
+    aggregate = np.asarray(aggregate)
+    area = np.asarray(area)
+    power = np.asarray(power)
+    order = sorted(range(len(area)),
+                   key=lambda i: (area[i], power[i], aggregate[i]))
+    front: List[int] = []
+    for i in order:
+        dominated = any(
+            area[j] <= area[i] and power[j] <= power[i]
+            and aggregate[j] <= aggregate[i]
+            and (area[j] < area[i] or power[j] < power[i]
+                 or aggregate[j] < aggregate[i])
+            for j in front)
+        if not dominated:
+            front.append(i)
+    return front
+
+
 @dataclasses.dataclass
 class SweepResult:
     """Full ``(A, V)`` score tensor plus the Table I / Pareto extractions."""
@@ -479,17 +552,8 @@ class SweepResult:
         Returned sorted by increasing area; no returned point is dominated
         by any variant in the sweep (asserted in tests/test_sweep.py).
         """
-        area = self.area(reference)
-        agg = self.aggregate_mean()
-        order = sorted(range(len(self.machines)),
-                       key=lambda i: (area[i], agg[i]))
-        front: List[int] = []
-        best = np.inf
-        for i in order:
-            if agg[i] < best:
-                front.append(i)
-                best = agg[i]
-        return front
+        return pareto_front_indices(self.area(reference),
+                                    self.aggregate_mean())
 
     def pareto_front_3d(
         self, cost_model: CostModel = DEFAULT_COST_MODEL
@@ -497,28 +561,12 @@ class SweepResult:
         """Variant indices on the (mean aggregate, area, power) Pareto front.
 
         All three objectives are minimized -- the full PPA trade-off of
-        paper §I, with congruence standing in for "performance fit".  The
-        lexicographic (area, power, aggregate) sort guarantees every
-        potential dominator of a point precedes it, so checking new points
-        against accepted front members is sufficient.  Returned sorted by
-        increasing area.
+        paper §I, with congruence standing in for "performance fit".
+        Returned sorted by increasing area.
         """
-        agg = self.aggregate_mean()
-        area = np.asarray(cost_model.area(self.machines))
-        power = np.asarray(cost_model.power(self.machines))
-        order = sorted(range(len(self.machines)),
-                       key=lambda i: (area[i], power[i], agg[i]))
-        front: List[int] = []
-        for i in order:
-            dominated = any(
-                area[j] <= area[i] and power[j] <= power[i]
-                and agg[j] <= agg[i]
-                and (area[j] < area[i] or power[j] < power[i]
-                     or agg[j] < agg[i])
-                for j in front)
-            if not dominated:
-                front.append(i)
-        return front
+        return pareto_front_indices_3d(self.aggregate_mean(),
+                                       cost_model.area(self.machines),
+                                       cost_model.power(self.machines))
 
     def top_variants(self, k: int = 10) -> List[int]:
         """Variant indices with the lowest suite-mean aggregate."""
@@ -685,6 +733,42 @@ def batched_congruence(
     )
 
 
+def _population(space: ParamSpace, n: int, mode: str, seed: int,
+                include_named: Sequence[MachineModel]) -> MachineBatch:
+    """The population ``run_sweep`` and ``shard_sweep`` share.
+
+    Kept in one place so a sharded sweep scores the exact same variants
+    (names included) as the single-device sweep it replaces.
+    """
+    if mode == "random":
+        pop = space.sample(n, seed=seed)
+    elif mode == "grid":
+        per_dim = max(2, int(np.ceil(n ** (1.0 / max(len(space.dims), 1)))))
+        pop = space.grid(per_dim)
+    else:
+        raise ValueError(f"unknown sweep mode {mode!r}")
+    if include_named:
+        pop = MachineBatch.concat(MachineBatch.from_models(include_named), pop)
+    return pop
+
+
+def _resolve_beta(profiles: ProfileBatch, beta, beta_machine,
+                  include_named: Sequence[MachineModel],
+                  space: ParamSpace, backend) -> np.ndarray:
+    """Per-app target vector under the shared run_sweep/shard_sweep
+    convention: explicit beta wins; otherwise derive against
+    ``beta_machine``, the first named model, or the space's nominal chip --
+    never an arbitrary sampled design, so scores stay comparable across
+    seeds and shard counts."""
+    if beta is None:
+        ref = beta_machine or (include_named[0] if include_named
+                               else space.nominal)
+        return default_beta_batched(
+            profiles, MachineBatch.from_models([ref]), backend=backend)
+    return np.broadcast_to(
+        np.asarray(beta, dtype=np.float64), (len(profiles),)).copy()
+
+
 def run_sweep(
     profiles,
     *,
@@ -706,25 +790,311 @@ def run_sweep(
     ``include_named`` models (e.g. the paper's baseline/denser/densest) are
     prepended.  When ``beta`` is None the per-app default target is derived
     against ``beta_machine``, defaulting to the first named model or, with
-    no named models, the space's nominal chip -- never an arbitrary sampled
-    design, so scores stay comparable across seeds.
+    no named models, the space's nominal chip.  ``backend`` picks the
+    kernel backend (``"numpy"``/``"jax"``/``"pallas"``; default resolves
+    $REPRO_SWEEP_BACKEND, then numpy).
+
+    Example (synthetic single-app suite):
+
+    >>> from repro.core import WorkloadProfile, run_sweep
+    >>> apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+    ...                         collective_bytes={"all-reduce": 2e10},
+    ...                         num_devices=256, model_flops=5e16)]
+    >>> res = run_sweep(apps, n=64, seed=0)
+    >>> len(res.machines)
+    64
+    >>> res.best_fit("app0") in res.variant_names
+    True
+    >>> front = res.pareto_front()          # 2-D: aggregate vs area
+    >>> front == sorted(front, key=lambda i: res.area()[i])
+    True
     """
     profiles = _as_profile_batch(profiles)  # pack once; input may be a generator
     space = space or ParamSpace.default()
-    if mode == "random":
-        pop = space.sample(n, seed=seed)
-    elif mode == "grid":
-        per_dim = max(2, int(np.ceil(n ** (1.0 / max(len(space.dims), 1)))))
-        pop = space.grid(per_dim)
-    else:
-        raise ValueError(f"unknown sweep mode {mode!r}")
-    if include_named:
-        pop = MachineBatch.concat(MachineBatch.from_models(include_named), pop)
-    if beta is None:
-        ref = beta_machine or (include_named[0] if include_named
-                               else space.nominal)
-        beta = default_beta_batched(
-            profiles, MachineBatch.from_models([ref]), backend=backend)
+    pop = _population(space, n, mode, seed, include_named)
+    beta = _resolve_beta(profiles, beta, beta_machine, include_named, space,
+                         backend)
     return batched_congruence(
         profiles, pop, beta=beta, timing_model=timing_model, clamp=clamp,
         backend=backend)
+
+
+# --------------------------------------------------------------------------- #
+# Sharded mega-sweeps: split the population across a mesh, pre-filter per
+# shard, merge fronts on the host
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class ShardedSweepResult:
+    """Pareto-complete summary of a sharded sweep.
+
+    A mega-sweep's full ``(A, V)`` tensor never exists in one place -- each
+    shard's scores are reduced to per-variant statistics and a Pareto
+    candidate set, then discarded.  ``result`` is a full ``SweepResult``
+    over the surviving candidates only (their global sweep indices are in
+    ``candidate_indices``), which is *front-complete*: every variant on the
+    global 2-D or 3-D Pareto front survives pre-filtering, so
+    ``pareto_front()`` here names exactly the variants a single-device
+    ``run_sweep`` over the same population would name (pinned in
+    tests/test_sweep.py).
+
+    Front-completeness only holds for the silicon axes the shards were
+    pre-filtered with, so the extraction methods take NO cost-model
+    override: they always use the ``cost_model`` the sweep ran with (to
+    rank under different weights, re-run ``shard_sweep`` with that
+    ``cost_model=``) -- pruned variants cannot be recovered post hoc.
+    """
+
+    result: SweepResult              # survivors only, fully scored
+    candidate_indices: np.ndarray    # survivors' indices into the full sweep
+    num_variants: int                # full population size V
+    num_shards: int
+    mesh_axis: str                   # shard layout, e.g. "variants=4 mesh"
+    best_fit_map: Dict[str, str]     # app -> best variant over ALL V
+    cost_model: CostModel            # the model the pre-filter ran with
+
+    # ------------------------------ lookups --------------------------- #
+
+    @property
+    def apps(self) -> List[str]:
+        return self.result.apps
+
+    @property
+    def backend(self) -> str:
+        return self.result.backend
+
+    def best_fit(self, app: str) -> str:
+        """Best-fit variant over the FULL population (merged across shards)."""
+        return self.best_fit_map[app]
+
+    # --------------------------- extractions -------------------------- #
+
+    def pareto_front(self) -> List[int]:
+        """2-D (area, aggregate) front under the sweep's cost model.
+        Indices are into ``result`` (the survivor set) -- use
+        ``pareto_names`` for population-stable identifiers."""
+        return pareto_front_indices(
+            self.cost_model.area(self.result.machines),
+            self.result.aggregate_mean())
+
+    def pareto_front_3d(self) -> List[int]:
+        """3-D (aggregate, area, power) front under the sweep's cost model."""
+        return pareto_front_indices_3d(
+            self.result.aggregate_mean(),
+            self.cost_model.area(self.result.machines),
+            self.cost_model.power(self.result.machines))
+
+    def pareto_names(self) -> List[str]:
+        return [self.result.machines.names[i] for i in self.pareto_front()]
+
+    # ----------------------------- reports ---------------------------- #
+
+    def markdown(self, top_k: int = 10) -> str:
+        header = (f"sharded sweep: {self.num_variants} variants across "
+                  f"{self.num_shards} shards ({self.mesh_axis}); "
+                  f"{len(self.result.machines)} Pareto candidates kept")
+        return header + "\n\n" + self.result.markdown(top_k, self.cost_model)
+
+    def to_json(self, top_k: Optional[int] = None) -> dict:
+        out = self.result.to_json(top_k=top_k, cost_model=self.cost_model)
+        out.update(
+            num_variants=self.num_variants,
+            num_candidates=len(self.result.machines),
+            num_shards=self.num_shards,
+            mesh_axis=self.mesh_axis,
+            best_fit={app: self.best_fit_map[app] for app in self.apps},
+        )
+        return out
+
+
+def _shard_bounds(v: int, num_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous, near-equal ``[lo, hi)`` shard ranges covering ``[0, v)``."""
+    base, extra = divmod(v, num_shards)
+    bounds, lo = [], 0
+    for s in range(num_shards):
+        hi = lo + base + (1 if s < extra else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def _jax_sharded_stats(pb: ProfileBatch, pop: MachineBatch,
+                       beta_vec: np.ndarray, timing_model: str, clamp: bool,
+                       mesh) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Device-sharded statistics pass for the jax backend.
+
+    The machine arrays are placed with ``NamedSharding`` over the mesh's
+    variant axis, so the jitted congruence pass partitions across devices
+    and each device only ever holds its ``(A, V/ndev)`` slice of the score
+    tensor.  Only the O(V) per-variant aggregate and the O(A) best-fit
+    reductions are gathered -- the (A, V) tensors never are.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    ndev = mesh.size
+    v = len(pop)
+    v_pad = -(-v // ndev) * ndev
+    with enable_x64():
+        m_fields = []
+        for f in pop.arrays():
+            arr = np.asarray(f, dtype=np.float64)
+            if v_pad != v:  # benign all-1.0 pad machines, sliced off below
+                arr = np.concatenate([arr, np.ones(v_pad - v)])
+            m_fields.append(jax.device_put(
+                jnp.asarray(arr), NamedSharding(mesh, P(axis))))
+        m = K.MachineArrays(*m_fields)
+        replicated = NamedSharding(mesh, P())
+        p = K.ProfileArrays(*(jax.device_put(
+            jnp.asarray(np.asarray(f, dtype=np.float64)), replicated)
+            for f in pb.arrays()))
+        beta = jax.device_put(jnp.asarray(beta_vec), replicated)
+
+        @functools.partial(jax.jit, static_argnames=("timing_model", "clamp"))
+        def stats(p, m, beta, timing_model, clamp):
+            out = K.congruence_kernel(jnp, p, m, beta, timing_model,
+                                      clamp=clamp)
+            # The pad machines are benign but still score; mask them to
+            # +inf before the variant-axis reductions so a pad column can
+            # never win an app's argmin (v/v_pad are static ints, so the
+            # mask is elementwise and preserves the variant sharding).
+            masked = jnp.where(jnp.arange(v_pad) < v, out.aggregate, jnp.inf)
+            return (out.aggregate.mean(axis=0),  # (V_pad,) suite mean
+                    masked.min(axis=1),          # (A,) best value
+                    masked.argmin(axis=1))       # (A,) best index, < v
+
+        agg, app_min, app_idx = stats(p, m, beta, timing_model=timing_model,
+                                      clamp=clamp)
+    return (np.asarray(agg)[:v], np.asarray(app_min),
+            np.asarray(app_idx).astype(np.int64))
+
+
+def shard_sweep(
+    profiles,
+    *,
+    space: Optional[ParamSpace] = None,
+    n: int = 1024,
+    mode: str = "random",
+    seed: int = 0,
+    include_named: Sequence[MachineModel] = (),
+    beta=None,
+    beta_machine: Optional[MachineModel] = None,
+    timing_model: str = "serial",
+    clamp: bool = True,
+    backend: Optional[str] = None,
+    num_shards: Optional[int] = None,
+    mesh=None,
+    keep_top: int = 16,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+) -> ShardedSweepResult:
+    """Sharded ``run_sweep`` for populations that outgrow one device.
+
+    Same population, beta convention and scoring as ``run_sweep`` (same
+    ``space``/``n``/``mode``/``seed`` give bitwise-identical variants), but
+    the ``(A, V)`` score tensor is never materialized in one place:
+
+      * **jax backend** -- the machine arrays are placed across ``mesh``
+        (built via the ``repro.launch.mesh`` shims; default one axis over
+        every local device) with ``jax.sharding.NamedSharding``, so the
+        jitted kernels partition the population and each device holds only
+        its ``(A, V/ndev)`` slice.
+      * **numpy / pallas backends** -- the population is scored shard by
+        shard (``num_shards`` chunks), bounding peak memory at
+        ``O(A * V / num_shards)``.
+
+    Either way, each shard is reduced *in place* to per-variant suite-mean
+    aggregates and per-app minima (gather-free: only O(V) + O(A) statistics
+    leave the shard).  The host then pre-filters each shard to its local
+    Pareto candidates -- every globally non-dominated point is locally
+    non-dominated, so the union of local fronts contains the global front
+    -- merges in the per-app argmins and per-shard top-``keep_top``, and
+    re-scores only the survivors into the full ``SweepResult`` carried by
+    the returned ``ShardedSweepResult``.
+
+    Example (1-device mesh; the front matches ``run_sweep`` exactly):
+
+    >>> from repro.core import WorkloadProfile, run_sweep, shard_sweep
+    >>> apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+    ...                         collective_bytes={"all-reduce": 2e10},
+    ...                         num_devices=256, model_flops=5e16)]
+    >>> sharded = shard_sweep(apps, n=128, num_shards=4)
+    >>> single = run_sweep(apps, n=128)
+    >>> sharded.pareto_names() == [single.machines.names[i]
+    ...                            for i in single.pareto_front()]
+    True
+    >>> sharded.best_fit("app0") == single.best_fit("app0")
+    True
+    """
+    pb = _as_profile_batch(profiles)
+    space = space or ParamSpace.default()
+    pop = _population(space, n, mode, seed, include_named)
+    be = K.get_backend(backend)
+    beta_vec = _resolve_beta(pb, beta, beta_machine, include_named, space, be)
+    v = len(pop)
+
+    # Only the jax backend places arrays on a device mesh; the chunked
+    # backends (numpy/pallas) never touch jax device state here, so don't
+    # initialize it just for a label.
+    if be.name == "jax" and mesh is None:
+        import jax
+
+        from repro.launch import mesh as MESH
+
+        ndev = max(1, len(jax.devices()))
+        mesh = MESH.make_mesh((ndev,), ("variants",))
+    default_shards = mesh.size if mesh is not None else 1
+    num_shards = max(1, min(num_shards or default_shards, v))
+    mesh_axis = (f"{mesh.axis_names[0]}={mesh.size} mesh" if mesh is not None
+                 else "host-chunked")
+    bounds = _shard_bounds(v, num_shards)
+
+    # ---- statistics pass: (V,) suite means + (A,) best fits, gather-free
+    if be.name == "jax":
+        agg_mean, app_min, app_idx = _jax_sharded_stats(
+            pb, pop, beta_vec, timing_model, clamp, mesh)
+    else:
+        agg_mean = np.empty(v, dtype=np.float64)
+        app_min = np.full(len(pb), np.inf)
+        app_idx = np.zeros(len(pb), dtype=np.int64)
+        for lo, hi in bounds:
+            out = be.congruence(pb.arrays(), pop.slice(lo, hi).arrays(),
+                                beta_vec, timing_model=timing_model,
+                                clamp=clamp)
+            agg = be.to_numpy(out.aggregate)
+            agg_mean[lo:hi] = agg.mean(axis=0)
+            local_idx = np.argmin(agg, axis=1)
+            local_min = agg[np.arange(len(pb)), local_idx]
+            better = local_min < app_min
+            app_min = np.where(better, local_min, app_min)
+            app_idx = np.where(better, local_idx + lo, app_idx)
+
+    # ---- per-shard Pareto pre-filter, then host-side merge
+    area = np.asarray(cost_model.area(pop))
+    power = np.asarray(cost_model.power(pop))
+    survivors: set = set(int(i) for i in app_idx)
+    for lo, hi in bounds:
+        chunk = slice(lo, hi)
+        a, p2, p3 = area[chunk], power[chunk], agg_mean[chunk]
+        survivors.update(lo + i for i in pareto_front_indices(a, p3))
+        survivors.update(lo + i for i in pareto_front_indices_3d(p3, a, p2))
+        order = np.argsort(p3, kind="stable")[:keep_top]
+        survivors.update(int(lo + i) for i in order)
+    candidates = np.array(sorted(survivors), dtype=np.int64)
+
+    result = batched_congruence(
+        pb, pop.take(candidates), beta=beta_vec, timing_model=timing_model,
+        clamp=clamp, backend=be)
+    return ShardedSweepResult(
+        result=result,
+        candidate_indices=candidates,
+        num_variants=v,
+        num_shards=num_shards,
+        mesh_axis=mesh_axis,
+        best_fit_map={app: pop.names[int(app_idx[i])]
+                      for i, app in enumerate(pb.names)},
+        cost_model=cost_model,
+    )

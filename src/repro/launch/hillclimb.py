@@ -200,9 +200,9 @@ def main(argv=None) -> int:
                          "variants and report the best fit + Pareto front")
     ap.add_argument("--sweep-seed", type=int, default=0)
     ap.add_argument("--backend", default=None,
-                    choices=("numpy", "jax"),
                     help="kernel backend for the co-design sweep "
-                         "(default: $REPRO_SWEEP_BACKEND, then numpy)")
+                         "(numpy/jax/pallas or any registered name; "
+                         "default: $REPRO_SWEEP_BACKEND, then numpy)")
     ap.add_argument("--grad", type=int, default=0, metavar="STEPS",
                     help="after substitution, gradient co-design: optimize "
                          "machine log-rates from the named-variant seeds by "
@@ -211,6 +211,10 @@ def main(argv=None) -> int:
     ap.add_argument("--grad-lr", type=float, default=0.1,
                     help="initial log-rate step size for --grad")
     args = ap.parse_args(argv)
+    # Fail at parse time with the registry's current contents, not deep
+    # inside get_backend() after minutes of compile work.
+    from repro.core.kernels_xp import validate_backend_arg
+    validate_backend_arg(ap, args.backend)
 
     cfg = C.get_config(args.arch)
     if args.moe_impl and cfg.moe is not None:

@@ -442,3 +442,143 @@ def test_machine_model_with_rates():
     assert m.scale["memory"] == 0.7    # scales preserved
     with pytest.raises(KeyError):
         TPU_V5E.with_rates(bogus=1.0)
+
+
+# --------------------------------------------------------------------------- #
+# shard_sweep: sharded mega-sweeps must reproduce the single-device answer
+# --------------------------------------------------------------------------- #
+
+
+def _front_names(res):
+    return ([res.machines.names[i] for i in res.pareto_front()],
+            [res.machines.names[i] for i in res.pareto_front_3d()])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_shard_sweep_matches_run_sweep(backend):
+    """ISSUE acceptance: shard_sweep produces the same Pareto fronts and
+    best fits as a single-device run_sweep over the identical population.
+    backend="jax" exercises the NamedSharding mesh path (1-device mesh on
+    CI); backend="numpy" the chunked shard loop."""
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(4, seed=5)
+    single = run_sweep(profiles, n=150, include_named=VARIANTS,
+                       backend=backend)
+    sharded = shard_sweep(profiles, n=150, include_named=VARIANTS,
+                          backend=backend, num_shards=4)
+    f2, f3 = _front_names(single)
+    sf2, sf3 = _front_names(sharded.result)
+    assert sharded.pareto_names() == sf2 == f2
+    assert sf3 == f3
+    for app in single.apps:
+        assert sharded.best_fit(app) == single.best_fit(app)
+    # pre-filtering actually filtered, and survivors are scored identically
+    assert sharded.num_variants == len(single.machines)
+    assert 0 < len(sharded.result.machines) < sharded.num_variants
+    np.testing.assert_allclose(
+        sharded.result.aggregate,
+        single.aggregate[:, sharded.candidate_indices], rtol=1e-12)
+
+
+def test_shard_sweep_single_shard_and_reports():
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(3, seed=21)
+    single = run_sweep(profiles, n=64)
+    sharded = shard_sweep(profiles, n=64, num_shards=1)
+    assert sharded.num_shards == 1
+    assert sharded.pareto_names() == [
+        single.machines.names[i] for i in single.pareto_front()]
+    md = sharded.markdown(top_k=4)
+    assert md.startswith("sharded sweep: 64 variants across 1 shards")
+    blob = sharded.to_json(top_k=4)
+    assert blob["num_variants"] == 64
+    assert blob["num_shards"] == 1
+    assert blob["num_candidates"] == len(sharded.result.machines)
+    assert set(blob["best_fit"]) == set(sharded.apps)
+
+
+def test_shard_sweep_pallas_backend():
+    """The fused f32 backend shards too; fronts are checked for set-level
+    agreement with its own single-device pass (bitwise within backend)."""
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(3, seed=8)
+    single = run_sweep(profiles, n=96, backend="pallas")
+    sharded = shard_sweep(profiles, n=96, backend="pallas", num_shards=3)
+    assert sharded.pareto_names() == [
+        single.machines.names[i] for i in single.pareto_front()]
+    for app in single.apps:
+        assert sharded.best_fit(app) == single.best_fit(app)
+
+
+def test_shard_bounds_cover_and_balance():
+    from repro.core.sweep import _shard_bounds
+
+    for v, s in [(10, 3), (7, 7), (5, 2), (1, 1), (128, 4)]:
+        bounds = _shard_bounds(v, s)
+        assert bounds[0][0] == 0 and bounds[-1][1] == v
+        sizes = [hi - lo for lo, hi in bounds]
+        assert sum(sizes) == v
+        assert max(sizes) - min(sizes) <= 1
+        for (_, hi), (lo, _) in zip(bounds, bounds[1:]):
+            assert hi == lo
+
+
+def test_shard_sweep_custom_cost_model_front_complete():
+    """Fronts are extracted under the SAME cost model the shards were
+    pre-filtered with (stored on the result), so reweighted sweeps stay
+    front-complete vs the single-device reference."""
+    from repro.core.costmodel import CostModel
+    from repro.core.sweep import (pareto_front_indices, shard_sweep)
+
+    cm = CostModel(area_weights={"peak_flops": 4.0, "hbm_bw": 1.0,
+                                 "ici_bw_total": 0.5, "inter_pod_bw": 0.5})
+    profiles = random_profiles(3, seed=31)
+    single = run_sweep(profiles, n=120)
+    sharded = shard_sweep(profiles, n=120, num_shards=5, cost_model=cm)
+    # single-device reference fronts under the same custom model
+    ref2 = [single.machines.names[i] for i in pareto_front_indices(
+        cm.area(single.machines), single.aggregate_mean())]
+    ref3 = [single.machines.names[i] for i in single.pareto_front_3d(cm)]
+    assert sharded.pareto_names() == ref2
+    assert [sharded.result.machines.names[i]
+            for i in sharded.pareto_front_3d()] == ref3
+    assert sharded.cost_model is cm
+
+
+def test_shard_sweep_multidevice_pad_masking():
+    """Regression: on a multi-device mesh with V not divisible by the
+    device count, the benign all-1.0 pad machines must never win an app's
+    argmin in the sharded jax statistics pass.  Needs a forced 8-device
+    host, so it runs in a subprocess (XLA_FLAGS must precede jax import).
+    """
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        from repro.core import WorkloadProfile, run_sweep, shard_sweep
+        # interconnect-dominated profile: makes cheap pad machines look good
+        apps = [WorkloadProfile(name="app0", flops=1e10, hbm_bytes=1e9,
+                                collective_bytes={"all-reduce": 5e13},
+                                num_devices=256, model_flops=1e12)]
+        sharded = shard_sweep(apps, n=1001, backend="jax")   # 1001 % 8 != 0
+        single = run_sweep(apps, n=1001, backend="jax")
+        assert sharded.best_fit("app0") == single.best_fit("app0"), (
+            sharded.best_fit("app0"), single.best_fit("app0"))
+        assert sharded.pareto_names() == [
+            single.machines.names[i] for i in single.pareto_front()]
+        print("OK", sharded.num_shards)
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    env.pop("REPRO_SWEEP_BACKEND", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run([sys.executable, "-c", code], cwd=root, env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert proc.stdout.startswith("OK 8")
