@@ -21,6 +21,10 @@ tables to benchmarks/out/ (consumed by EXPERIMENTS.md).
   grad_codesign        -- jax.grad co-design: scalarized-objective descent
                           from the named-variant seeds (steps/second and
                           per-seed improvement).
+  constrained_codesign -- budgeted co-design trade-off: unconstrained vs
+                          projected-gradient vs augmented-Lagrangian
+                          descent under a fixed area budget (objective,
+                          feasibility, wall-clock side by side).
 
 ``--smoke`` runs every benchmark on tiny synthetic inputs with a single
 repeat so CI can exercise the whole harness in seconds.
@@ -255,6 +259,76 @@ def grad_codesign_bench() -> None:
                               res.objective_final)]))
 
 
+def constrained_codesign_bench() -> None:
+    """Budgeted co-design: objective vs feasibility vs wall-clock per mode.
+
+    Runs the three descent modes from the named-variant seeds under a
+    reference-chip area budget (area <= 1.0): unconstrained (`grad_codesign`,
+    the PR 2 baseline -- free to inflate every subsystem), projected
+    gradient, and augmented Lagrangian.  The table quantifies the price of
+    feasibility: how much scalarized objective each constrained mode gives
+    up to stay inside the budget, and what each costs in wall-clock.
+    """
+    from repro.core.codesign import grad_codesign
+    from repro.core.constrained import constrained_codesign
+    from repro.core.sweep import MachineBatch
+
+    profiles = common.profiles_or_synthetic()[0]
+    seeds = MachineBatch.from_models(VARIANTS)
+    budget = 1.0  # the reference chip's area, by construction
+    steps = 10 if common.SMOKE else 80
+
+    def run_unconstrained():
+        return grad_codesign(profiles, seeds, steps=steps)
+
+    def run_projected():
+        return constrained_codesign(profiles, seeds, steps=steps,
+                                    area_budget=budget, mode="projected")
+
+    def run_lagrangian():
+        return constrained_codesign(profiles, seeds, steps=steps,
+                                    area_budget=budget, mode="lagrangian")
+
+    rows = []
+    for mode, fn in (("unconstrained", run_unconstrained),
+                     ("projected", run_projected),
+                     ("lagrangian", run_lagrangian)):
+        us, res = common.timeit(fn, repeat=1)
+        area = res.area_final
+        feas = ("n/a (no budget)" if res.feasible is None else
+                f"{int(res.feasible.sum())}/{len(res.feasible)}")
+        best_j = float(res.objective_final[res.best])
+        common.emit(f"constrained/{mode}", us / max(steps, 1),
+                    f"best_J={best_j:.4f} max_area={float(area.max()):.3f} "
+                    f"feasible={feas}")
+        rows.append((mode, res, us / 1e6))
+
+    md = [f"constrained co-design: {len(profiles)} apps, "
+          f"{len(seeds)} named seeds, area budget {budget:.1f} "
+          f"(reference chip), {steps} steps",
+          "",
+          "| mode | best J(final) | mean J(final) | max area | max power "
+          "| feasible | wall-clock s |",
+          "|---|---|---|---|---|---|---|"]
+    for mode, res, secs in rows:
+        feas = ("n/a" if res.feasible is None
+                else f"{int(res.feasible.sum())}/{len(res.feasible)}")
+        md.append(
+            f"| {mode} | {float(res.objective_final[res.best]):.4f} "
+            f"| {float(res.objective_final.mean()):.4f} "
+            f"| {float(res.area_final.max()):.3f} "
+            f"| {float(res.power_final.max()):.3f} "
+            f"| {feas} | {secs:.2f} |")
+    md += ["",
+           "(unconstrained is the PR 2 baseline: nothing stops it from "
+           "exceeding the budget, so its area column is the price of "
+           "ignoring silicon limits.  Projected keeps every iterate "
+           "feasible; Lagrangian approaches from outside with a damped "
+           "violation trace and a final safety projection.  See "
+           "docs/codesign.md for the worked guide.)"]
+    common.write_out("constrained_codesign.md", "\n".join(md))
+
+
 BENCHMARKS = {
     "table1_congruence": table1_congruence,
     "fig3_radar": fig3_radar,
@@ -263,6 +337,7 @@ BENCHMARKS = {
     "perf_hillclimb": perf_hillclimb,
     "sweep_scaling": sweep_scaling,
     "grad_codesign": grad_codesign_bench,
+    "constrained_codesign": constrained_codesign_bench,
 }
 
 

@@ -90,6 +90,21 @@ def main() -> None:
     print(f"best: {best.name} peak_flops={best.peak_flops:.3e} "
           f"hbm_bw={best.hbm_bw:.3e} ici_bw={best.ici_bw:.3e}")
 
+    print("\n== constrained co-design: stay inside the silicon budget ==")
+    # Warm-start descent from the sweep's Pareto survivors and keep
+    # CostModel.area(m) <= 1.0 (the reference chip) -- docs/codesign.md
+    # is the full guide.
+    from repro.core import constrained_codesign
+    cc = constrained_codesign(profiles, res.seed_codesign(k=4),
+                              area_budget=1.0, steps=60)
+    for n, jf, a, ok in zip(cc.names, cc.objective_final, cc.area_final,
+                            cc.feasible):
+        print(f"{n:12s} objective={jf:.4f} area={a:.3f} "
+              f"{'feasible' if ok else 'INFEASIBLE'}")
+    cbest = cc.best_model()
+    print(f"best feasible: {cbest.name} area="
+          f"{cc.area_final[cc.best]:.3f} <= budget 1.0")
+
 
 if __name__ == "__main__":
     main()

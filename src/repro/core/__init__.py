@@ -12,12 +12,19 @@ Public API:
   kernels_xp.get_backend                   -- numpy/jax/pallas kernel backends
   costmodel.CostModel                      -- area + power silicon proxies
   codesign.grad_codesign                   -- jax.grad machine co-design
+  constrained.constrained_codesign         -- area/power-budgeted descent
+  constrained.joint_codesign               -- joint machine+sharding descent
 
 See docs/architecture.md for the layer map and docs/backends.md for the
 backend-authoring contract.
 """
 
 from repro.core.codesign import CodesignResult, grad_codesign, scalarized_objective
+from repro.core.constrained import (
+    constrained_codesign,
+    joint_codesign,
+    project_to_budgets,
+)
 from repro.core.congruence import (
     CongruenceReport,
     SCORE_NAMES,

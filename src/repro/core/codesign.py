@@ -8,15 +8,23 @@ design move?" -- by differentiating a scalarized multi-objective
            + w_area * CostModel.area(m) + w_power * CostModel.power(m)
 
 with respect to the *log* of the provisioned rates (``peak_flops``,
-``hbm_bw``, ``ici_bw``, ``inter_pod_bw``).  Log-parameterization keeps the
-rates positive and makes one step a multiplicative change, matching how
-hardware design points actually move (2x the MXUs, 1.5x the HBM stacks).
+``hbm_bw``, ``ici_bw``, ``inter_pod_bw``).  Descent is on log-rates, NOT
+raw rates: log-parameterization keeps the rates positive and makes one
+step a multiplicative change, matching how hardware design points actually
+move (2x the MXUs, 1.5x the HBM stacks).  The ``span`` clip bounds the
+feasible box in that same log space -- each rate is confined to
+``[seed/span, seed*span]``, i.e. ``log(rate)`` to ``log(seed) +- log(span)``
+-- so every operator downstream (the backtracking retraction here, the
+budget projection in ``repro.core.constrained``) composes in one
+coordinate system.
 
 This is only possible because the timing/Eq. 1 math lives in ONE traceable
 place (``repro.core.kernels_xp``): the JAX backend evaluates the identical
 kernel the NumPy sweep runs, so the gradient descends the surface the sweep
 scores.  ``ici_links`` (integer) and the per-subsystem degradation
-``scale_*`` factors are held fixed at their seed values.
+``scale_*`` factors are held fixed at their seed values here; the
+constrained subsystem (``repro.core.constrained``) relaxes ``ici_links``
+continuously and rounds with repair.
 
 The objective uses unclamped Eq. 1 scores: clamping to [0, 1] zeroes the
 gradient wherever a score saturates, which is exactly where a dominated
@@ -30,12 +38,17 @@ Entry points:
   grad_codesign        -- descend J from a MachineBatch seed; returns a
                           ``CodesignResult`` with per-variant trajectories
                           and the optimized ``MachineModel`` designs.
+
+Constrained descent (area/power budgets), joint machine+sharding-variant
+descent and the ``ici_links`` integer relaxation live in
+``repro.core.constrained`` and reuse this module's descent machinery;
+``docs/codesign.md`` is the worked optimization guide.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -44,6 +57,8 @@ from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
 from repro.core.machine import MachineModel
 
 #: The machine constants the gradient may move, in theta column order.
+#: ``repro.core.constrained`` appends a 5th column, ``log(ici_links)``,
+#: when the integer relaxation is enabled.
 OPT_FIELDS = ("peak_flops", "hbm_bw", "ici_bw", "inter_pod_bw")
 
 
@@ -52,13 +67,20 @@ def _as_batches(profiles, machines):
     return _as_profile_batch(profiles), _as_machine_batch(machines)
 
 
-def _machine_arrays_from_theta(xp, theta, fixed: K.MachineArrays) -> K.MachineArrays:
-    """Rebuild ``MachineArrays`` with rates ``exp(theta)``, rest from seed."""
+def machine_arrays_from_theta(xp, theta, fixed: K.MachineArrays) -> K.MachineArrays:
+    """Rebuild ``MachineArrays`` with rates ``exp(theta)``, rest from seed.
+
+    ``theta`` has one column per ``OPT_FIELDS`` entry; a 5th column, when
+    present, carries ``log(ici_links)`` (the continuous relaxation used by
+    ``repro.core.constrained``), otherwise links stay at the seed value.
+    """
+    links = (xp.exp(theta[:, 4]) if theta.shape[1] == len(OPT_FIELDS) + 1
+             else fixed.ici_links)
     return K.MachineArrays(
         peak_flops=xp.exp(theta[:, 0]),
         hbm_bw=xp.exp(theta[:, 1]),
         ici_bw=xp.exp(theta[:, 2]),
-        ici_links=fixed.ici_links,
+        ici_links=links,
         inter_pod_bw=xp.exp(theta[:, 3]),
         scale_compute=fixed.scale_compute,
         scale_memory=fixed.scale_memory,
@@ -68,11 +90,251 @@ def _machine_arrays_from_theta(xp, theta, fixed: K.MachineArrays) -> K.MachineAr
 
 def _objective_terms(xp, p: K.ProfileArrays, m: K.MachineArrays, beta,
                      timing_model: str, eps: float, cost_model: CostModel,
-                     w_area: float, w_power: float):
-    """Per-variant (V,) scalarized objective -- the traceable core."""
+                     w_area: float, w_power: float, app_weights=None):
+    """Per-variant (V,) scalarized objective -- the traceable core.
+
+    ``app_weights`` (``(A, V)``, each column summing to 1 -- every workload
+    group contributes weight ``1/n_groups`` spread over its members)
+    replaces the plain mean over apps; the joint machine+variant descent
+    uses it to select (hard) or mix (softmax) sharding variants of the
+    same application.
+    """
     out = K.congruence_kernel(xp, p, m, beta, timing_model, eps, clamp=False)
-    fit = xp.mean(out.aggregate, axis=0)
+    if app_weights is None:
+        fit = xp.mean(out.aggregate, axis=0)
+    else:
+        fit = xp.sum(app_weights * out.aggregate, axis=0)
     return fit + w_area * cost_model.area(m) + w_power * cost_model.power(m)
+
+
+def theta_box(machines, span: float, optimize_links: bool = False,
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Seed log-rates and the span clip's feasible box, as ``(V, D)`` arrays.
+
+    Returns ``(theta0, lo, hi)`` with one column per ``OPT_FIELDS`` entry
+    plus, when ``optimize_links`` is set, a trailing ``log(ici_links)``
+    column floored at ``log(1)`` (a pod link count cannot drop below one).
+    """
+    from repro.core.sweep import _as_machine_batch
+    mb = _as_machine_batch(machines)
+    cols = [np.asarray(getattr(mb, f), dtype=np.float64) for f in OPT_FIELDS]
+    if optimize_links:
+        cols.append(np.asarray(mb.ici_links, dtype=np.float64))
+    theta0 = np.log(np.stack(cols, axis=1))
+    lo, hi = theta0 - np.log(span), theta0 + np.log(span)
+    if optimize_links:
+        lo[:, -1] = np.maximum(lo[:, -1], 0.0)
+        theta0[:, -1] = np.maximum(theta0[:, -1], lo[:, -1])
+    return theta0, lo, hi
+
+
+def backtracking_descent(
+    jax, jnp, theta0, obj_fn: Callable, steps: int, lr: float,
+    retract: Callable, aux_fn: Optional[Callable] = None,
+    obj_args: Tuple = (), cache: Optional[Dict[str, Callable]] = None,
+) -> Tuple[object, object, List[np.ndarray], List[np.ndarray], object]:
+    """Per-variant backtracking line search on ``obj_fn`` (shared by every
+    co-design mode).
+
+    ``retract`` maps a raw gradient candidate back onto the feasible set
+    (the span-clip box for unconstrained descent, the budget projection of
+    ``repro.core.constrained`` for projected-gradient mode); it is applied
+    AFTER the gradient step, so accepted iterates are always feasible.
+    ``aux_fn(theta) -> (V,)`` optionally records a per-step diagnostic
+    (the constraint-violation trace).  ``lr`` may be a scalar or a ``(V,)``
+    per-variant array -- multi-round callers (the joint/Lagrangian outer
+    loops) pass the previous round's adapted rates back in so restarts do
+    not re-pay the warm-up.
+
+    ``obj_args`` are extra TRACED positional arguments forwarded to
+    ``obj_fn(theta, *obj_args)``; round-varying state (Lagrange
+    multipliers, selection weights, softmax temperature) belongs there,
+    not in a fresh closure per round.  With a ``cache`` dict (reused
+    across calls WITH THE SAME ``obj_fn``/``retract``), the jitted
+    obj/grad/retract compile once and later rounds retrace only on shape
+    changes.  Returns the final ``theta``, final per-variant objective,
+    the accepted-objective history (seed included), the aux history and
+    the adapted per-variant ``lr``.
+    """
+    cache = {} if cache is None else cache
+    if "obj" not in cache:
+        cache["obj"] = jax.jit(obj_fn)
+        cache["grad"] = jax.jit(jax.grad(
+            lambda th, *a: jnp.sum(obj_fn(th, *a))))
+        cache["retract"] = jax.jit(retract)
+        cache["aux"] = jax.jit(aux_fn) if aux_fn is not None else None
+    obj_j, grad_j = cache["obj"], cache["grad"]
+    retract_j, aux_j = cache["retract"], cache["aux"]
+
+    theta = retract_j(theta0)
+    f_cur = obj_j(theta, *obj_args)
+    lr_v = jnp.broadcast_to(jnp.asarray(lr, dtype=theta.dtype),
+                            (theta.shape[0],))
+    history = [np.asarray(f_cur)]
+    aux = [] if aux_j is None else [np.asarray(aux_j(theta))]
+    for _ in range(steps):
+        g = grad_j(theta, *obj_args)
+        cand = retract_j(theta - lr_v[:, None] * g)
+        f_new = obj_j(cand, *obj_args)
+        ok = f_new < f_cur
+        theta = jnp.where(ok[:, None], cand, theta)
+        f_cur = jnp.where(ok, f_new, f_cur)
+        lr_v = jnp.where(ok, lr_v * 1.2, lr_v * 0.5)
+        history.append(np.asarray(f_cur))
+        if aux_j is not None:
+            aux.append(np.asarray(aux_j(theta)))
+    return theta, f_cur, history, aux, lr_v
+
+
+@dataclasses.dataclass
+class CodesignResult:
+    """Outcome of one gradient co-design run (all arrays per-variant).
+
+    Every mode (unconstrained, projected, Lagrangian, joint) returns this
+    one type; the feasibility fields are populated whenever a budget was in
+    force and ``feasibility_report()`` renders them.  Doctest (fields are
+    plain NumPy; no descent needed to exercise the accessors):
+
+    >>> import numpy as np
+    >>> r = CodesignResult(
+    ...     names=["a", "b"], objective_seed=np.array([2.0, 3.0]),
+    ...     objective_final=np.array([1.0, 2.5]),
+    ...     seed_params=[{}, {}], final_params=[{}, {}],
+    ...     trajectory=np.array([[2.0, 3.0], [1.0, 2.5]]), steps=1,
+    ...     w_area=0.1, w_power=0.05)
+    >>> r.best
+    0
+    >>> r.improvement.tolist()
+    [1.0, 0.5]
+    """
+
+    names: List[str]
+    objective_seed: np.ndarray       # (V,) J at the seed designs
+    objective_final: np.ndarray      # (V,) J after descent
+    seed_params: List[Dict[str, float]]
+    final_params: List[Dict[str, float]]
+    trajectory: np.ndarray           # (steps+1, V) accepted J per step
+    steps: int
+    w_area: float
+    w_power: float
+    # ---- co-design mode + feasibility report (PR 4) ------------------- #
+    mode: str = "unconstrained"      # unconstrained|projected|lagrangian|joint-*
+    suffix: str = "+grad"            # appended to optimized variant names
+    area_budget: Optional[float] = None
+    power_budget: Optional[float] = None
+    area_final: Optional[np.ndarray] = None      # (V,) CostModel.area
+    power_final: Optional[np.ndarray] = None     # (V,) CostModel.power
+    feasible: Optional[np.ndarray] = None        # (V,) bool, None = no budget
+    violation_trace: Optional[np.ndarray] = None  # (T, V) relative violation
+    selection_names: Optional[List[List[str]]] = None  # joint: (V,)(G,) picks
+
+    @property
+    def improvement(self) -> np.ndarray:
+        """Per-variant objective decrease (positive = better)."""
+        return self.objective_seed - self.objective_final
+
+    @property
+    def best(self) -> int:
+        """Index of the best FEASIBLE variant (best overall if no budget)."""
+        if self.feasible is not None and bool(np.any(self.feasible)):
+            obj = np.where(self.feasible, self.objective_final, np.inf)
+            return int(np.argmin(obj))
+        return int(np.argmin(self.objective_final))
+
+    def best_model(self) -> MachineModel:
+        return self.models()[self.best]
+
+    def models(self) -> List[MachineModel]:
+        out = []
+        for name, params in zip(self.names, self.final_params):
+            out.append(MachineModel(
+                name=f"{name}{self.suffix}",
+                peak_flops=params["peak_flops"],
+                hbm_bw=params["hbm_bw"],
+                ici_bw=params["ici_bw"],
+                ici_links=int(round(params["ici_links"])),
+                inter_pod_bw=params["inter_pod_bw"],
+                scale={"compute": params["scale_compute"],
+                       "memory": params["scale_memory"],
+                       "interconnect": params["scale_interconnect"]},
+            ))
+        return out
+
+    def feasibility_report(self) -> dict:
+        """Budgets, final (area, power) and per-variant feasibility.
+
+        ``max_violation`` is the worst relative constraint violation seen
+        along the descent (0.0 everywhere for projected mode, damped toward
+        0 for Lagrangian -- the trace itself is in ``violation_trace``).
+        """
+        if self.area_budget is None and self.power_budget is None:
+            return {"constrained": False, "mode": self.mode}
+        rep = {
+            "constrained": True,
+            "mode": self.mode,
+            "area_budget": self.area_budget,
+            "power_budget": self.power_budget,
+            "all_feasible": bool(np.all(self.feasible)),
+            "variants": [
+                {"name": f"{n}{self.suffix}",
+                 "area": float(self.area_final[i]),
+                 "power": float(self.power_final[i]),
+                 "feasible": bool(self.feasible[i])}
+                for i, n in enumerate(self.names)],
+        }
+        if self.violation_trace is not None and len(self.violation_trace):
+            rep["max_violation"] = float(np.max(self.violation_trace))
+            rep["final_violation"] = float(np.max(self.violation_trace[-1]))
+        return rep
+
+    def to_json(self) -> dict:
+        blob = {
+            "steps": self.steps,
+            "mode": self.mode,
+            "w_area": self.w_area,
+            "w_power": self.w_power,
+            "best_variant": f"{self.names[self.best]}{self.suffix}",
+            "variants": [
+                {"name": f"{n}{self.suffix}",
+                 "objective_seed": float(js),
+                 "objective_final": float(jf),
+                 "seed_params": sp,
+                 "final_params": fp}
+                for n, js, jf, sp, fp in zip(
+                    self.names, self.objective_seed, self.objective_final,
+                    self.seed_params, self.final_params)],
+        }
+        if self.area_budget is not None or self.power_budget is not None:
+            blob["feasibility"] = self.feasibility_report()
+        if self.selection_names is not None:
+            blob["selection"] = {
+                f"{n}{self.suffix}": sel
+                for n, sel in zip(self.names, self.selection_names)}
+        return blob
+
+
+def params_of_theta(theta_row: np.ndarray, fixed_np: K.MachineArrays,
+                    i: int) -> Dict[str, float]:
+    """One variant's full parameter dict from a log-rate row + seed arrays."""
+    d = {f: float(np.exp(theta_row[j])) for j, f in enumerate(OPT_FIELDS)}
+    d["ici_links"] = (float(np.exp(theta_row[len(OPT_FIELDS)]))
+                      if len(theta_row) == len(OPT_FIELDS) + 1
+                      else float(fixed_np.ici_links[i]))
+    d["scale_compute"] = float(fixed_np.scale_compute[i])
+    d["scale_memory"] = float(fixed_np.scale_memory[i])
+    d["scale_interconnect"] = float(fixed_np.scale_interconnect[i])
+    return d
+
+
+def resolve_beta(pb, mb, beta, beta_ref: int) -> np.ndarray:
+    """The codesign beta convention: per-app default derived from variant
+    ``beta_ref`` (frozen during descent -- the paper's beta is a user
+    target, not a design variable), or an explicit scalar/(A,) target."""
+    if beta is None:
+        return K.get_backend("numpy").default_beta(
+            pb.arrays(), mb.select(beta_ref).arrays())
+    return np.broadcast_to(
+        np.asarray(beta, dtype=np.float64), (len(pb),)).copy()
 
 
 def scalarized_objective(
@@ -93,74 +355,13 @@ def scalarized_objective(
     ``beta`` is None the per-app target derives from variant ``beta_ref``.
     """
     pb, mb = _as_batches(profiles, machines)
-    be = K.get_backend("numpy")
-    if beta is None:
-        beta = be.default_beta(pb.arrays(), mb.select(beta_ref).arrays())
-    beta = np.broadcast_to(np.asarray(beta, dtype=np.float64), (len(pb),))
+    beta = np.broadcast_to(
+        np.asarray(resolve_beta(pb, mb, beta, beta_ref), dtype=np.float64),
+        (len(pb),))
     with np.errstate(divide="ignore", invalid="ignore"):
         return _objective_terms(np, pb.arrays(), mb.arrays(), beta,
                                 timing_model, eps, cost_model,
                                 w_area, w_power)
-
-
-@dataclasses.dataclass
-class CodesignResult:
-    """Outcome of one gradient co-design run (all arrays per-variant)."""
-
-    names: List[str]
-    objective_seed: np.ndarray       # (V,) J at the seed designs
-    objective_final: np.ndarray      # (V,) J after descent
-    seed_params: List[Dict[str, float]]
-    final_params: List[Dict[str, float]]
-    trajectory: np.ndarray           # (steps+1, V) accepted J per step
-    steps: int
-    w_area: float
-    w_power: float
-
-    @property
-    def improvement(self) -> np.ndarray:
-        """Per-variant objective decrease (positive = better)."""
-        return self.objective_seed - self.objective_final
-
-    @property
-    def best(self) -> int:
-        return int(np.argmin(self.objective_final))
-
-    def best_model(self) -> MachineModel:
-        return self.models()[self.best]
-
-    def models(self) -> List[MachineModel]:
-        out = []
-        for name, params in zip(self.names, self.final_params):
-            out.append(MachineModel(
-                name=f"{name}+grad",
-                peak_flops=params["peak_flops"],
-                hbm_bw=params["hbm_bw"],
-                ici_bw=params["ici_bw"],
-                ici_links=int(round(params["ici_links"])),
-                inter_pod_bw=params["inter_pod_bw"],
-                scale={"compute": params["scale_compute"],
-                       "memory": params["scale_memory"],
-                       "interconnect": params["scale_interconnect"]},
-            ))
-        return out
-
-    def to_json(self) -> dict:
-        return {
-            "steps": self.steps,
-            "w_area": self.w_area,
-            "w_power": self.w_power,
-            "best_variant": f"{self.names[self.best]}+grad",
-            "variants": [
-                {"name": f"{n}+grad",
-                 "objective_seed": float(js),
-                 "objective_final": float(jf),
-                 "seed_params": sp,
-                 "final_params": fp}
-                for n, js, jf, sp, fp in zip(
-                    self.names, self.objective_seed, self.objective_final,
-                    self.seed_params, self.final_params)],
-        }
 
 
 def grad_codesign(
@@ -185,11 +386,18 @@ def grad_codesign(
     independently (the objective sums per-variant terms, so the gradient
     does not couple them).  ``beta`` follows the sweep convention (per-app
     default from variant ``beta_ref``, frozen during descent -- the paper's
-    beta is a user target, not a design variable).  ``span`` clips each
-    rate to [seed/span, seed*span], keeping designs inside a plausible
-    process envelope.  ``lr`` is the initial per-variant step on log-rates,
-    adapted by backtracking (x1.2 on success, x0.5 on failure), so the
-    accepted objective sequence is monotone non-increasing per variant.
+    beta is a user target, not a design variable).
+
+    Descent runs on the LOG of each rate; ``span`` clips ``log(rate)`` to
+    ``[log(seed) - log(span), log(seed) + log(span)]`` -- i.e. the rate to
+    ``[seed/span, seed*span]`` -- keeping designs inside a plausible
+    process envelope.  That clip box is exactly the feasible box the
+    constrained modes (``repro.core.constrained``) intersect with the
+    area/power budget set, and the combined clip+projection operator there
+    is order-invariant with this clip (pinned in tests/test_constrained.py).
+    ``lr`` is the initial per-variant step on log-rates, adapted by
+    backtracking (x1.2 on success, x0.5 on failure), so the accepted
+    objective sequence is monotone non-increasing per variant.
 
     Example (descend the three named seeds for a few steps):
 
@@ -205,24 +413,16 @@ def grad_codesign(
     True
     >>> cd.best_model().peak_flops > 0
     True
+    >>> cd.mode
+    'unconstrained'
     """
     backend = K.get_backend("jax")
     jax, jnp = backend._jax, backend._jnp
 
     pb, mb = _as_batches(profiles, machines)
     fixed_np = mb.arrays()
-    if beta is None:
-        beta_np = K.get_backend("numpy").default_beta(
-            pb.arrays(), mb.select(beta_ref).arrays())
-    else:
-        beta_np = np.broadcast_to(
-            np.asarray(beta, dtype=np.float64), (len(pb),))
-
-    seed_rates = np.stack(
-        [np.asarray(getattr(mb, f), dtype=np.float64) for f in OPT_FIELDS],
-        axis=1)                                            # (V, 4)
-    theta0 = np.log(seed_rates)
-    lo, hi = theta0 - np.log(span), theta0 + np.log(span)
+    beta_np = resolve_beta(pb, mb, beta, beta_ref)
+    theta0, lo, hi = theta_box(mb, span)
 
     with backend._x64():
         p_arrays = backend.profile_arrays(pb.arrays())
@@ -231,50 +431,30 @@ def grad_codesign(
         lo_j, hi_j = backend.asarray(lo), backend.asarray(hi)
 
         def per_variant(theta):
-            m = _machine_arrays_from_theta(jnp, theta, fixed)
+            m = machine_arrays_from_theta(jnp, theta, fixed)
             return _objective_terms(jnp, p_arrays, m, beta_j, timing_model,
                                     eps, cost_model, w_area, w_power)
 
-        obj_fn = jax.jit(per_variant)
-        grad_fn = jax.jit(jax.grad(lambda th: jnp.sum(per_variant(th))))
-
-        theta = backend.asarray(theta0)
-        f_cur = obj_fn(theta)
-        lr_v = jnp.full((theta.shape[0],), float(lr))
-        history = [backend.to_numpy(f_cur)]
-
-        for _ in range(steps):
-            g = grad_fn(theta)
-            cand = jnp.clip(theta - lr_v[:, None] * g, lo_j, hi_j)
-            f_new = obj_fn(cand)
-            ok = f_new < f_cur
-            theta = jnp.where(ok[:, None], cand, theta)
-            f_cur = jnp.where(ok, f_new, f_cur)
-            lr_v = jnp.where(ok, lr_v * 1.2, lr_v * 0.5)
-            history.append(backend.to_numpy(f_cur))
-
+        theta, f_cur, history, _, _ = backtracking_descent(
+            jax, jnp, backend.asarray(theta0), per_variant, steps, lr,
+            retract=lambda th: jnp.clip(th, lo_j, hi_j))
         theta_np = backend.to_numpy(theta)
         f_final = backend.to_numpy(f_cur)
 
-    final_rates = np.exp(theta_np)
-    f_seed = history[0]
-
-    def params_of(rates_row, i) -> Dict[str, float]:
-        d = {f: float(rates_row[j]) for j, f in enumerate(OPT_FIELDS)}
-        d["ici_links"] = float(fixed_np.ici_links[i])
-        d["scale_compute"] = float(fixed_np.scale_compute[i])
-        d["scale_memory"] = float(fixed_np.scale_memory[i])
-        d["scale_interconnect"] = float(fixed_np.scale_interconnect[i])
-        return d
-
+    final_m = machine_arrays_from_theta(np, theta_np, fixed_np)
     return CodesignResult(
         names=list(mb.names),
-        objective_seed=np.asarray(f_seed),
+        objective_seed=np.asarray(history[0]),
         objective_final=np.asarray(f_final),
-        seed_params=[params_of(seed_rates[i], i) for i in range(len(mb))],
-        final_params=[params_of(final_rates[i], i) for i in range(len(mb))],
+        seed_params=[params_of_theta(theta0[i], fixed_np, i)
+                     for i in range(len(mb))],
+        final_params=[params_of_theta(theta_np[i], fixed_np, i)
+                      for i in range(len(mb))],
         trajectory=np.stack(history, axis=0),
         steps=steps,
         w_area=w_area,
         w_power=w_power,
+        mode="unconstrained",
+        area_final=np.asarray(cost_model.area(final_m)),
+        power_final=np.asarray(cost_model.power(final_m)),
     )

@@ -1,0 +1,718 @@
+"""Constrained + joint gradient co-design under real silicon budgets.
+
+``grad_codesign`` answers "in which direction should the machine move?";
+unconstrained, it happily inflates every subsystem until the span clip
+stops it.  This module turns the reproduction into a usable co-design tool
+by keeping descent inside an area (and optionally power) budget -- the
+paper's early-design-exploration pitch under the resource budgets that
+heterogeneous-FPGA exploration treats as first-class:
+
+  * **Projected gradient** (``mode="projected"``) -- every candidate step
+    is retracted onto ``{CostModel.area(m) <= budget}`` before the
+    backtracking acceptance test, so every accepted iterate is feasible.
+    The projection works in the SAME log-rate space the descent runs in: a
+    uniform log-shift ``theta -> max(theta - t, lo)`` (a multiplicative
+    rescale of every rate, floored at the span clip's lower box edge) with
+    ``t`` solved by bisection so the active budget binds exactly.  Because
+    the operator clips internally and is idempotent, it commutes with the
+    span clip -- the order-of-operations regression pinned in
+    tests/test_constrained.py.
+  * **Augmented Lagrangian** (``mode="lagrangian"``) -- descent on
+    ``J + (1/2mu) * (relu(lam + mu*(area - budget))^2 - lam^2)`` with dual
+    updates between inner descents; iterates may leave the feasible region
+    but the recorded violation trace is monotonically damped (an outer
+    iterate is only accepted when it does not increase the violation), and
+    a final safety projection makes the returned machines feasible to
+    1e-9.
+  * **Joint (machine, sharding-variant) descent** (``joint_codesign``) --
+    each application contributes a GROUP of sharding variants; descent
+    optimizes machine log-rates jointly with the per-(app, variant) choice,
+    either by alternation (harden the argmin selection, descend, repeat) or
+    simultaneously through a temperature-annealed softmax relaxation over
+    the group axis.  Both finish with a hard selection.
+  * **Integer relaxation for** ``ici_links`` (``optimize_links=True``) --
+    a continuous ``log(ici_links)`` column joins theta (floored at one
+    link); after descent each variant is rounded BOTH ways, each rounding
+    is repaired by re-projecting the rate columns onto the budget with the
+    links column held fixed, and the feasible argmin wins -- so
+    rounding-with-repair never returns an infeasible link count.
+
+All modes reuse the one descent loop and the one traceable objective in
+``repro.core.codesign`` -- the same ``kernels_xp`` math every sweep scores
+with -- and return the same ``CodesignResult`` (with the feasibility
+report populated).  ``docs/codesign.md`` is the worked guide.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import kernels_xp as K
+from repro.core.codesign import (
+    OPT_FIELDS,
+    CodesignResult,
+    _as_batches,
+    _objective_terms,
+    backtracking_descent,
+    machine_arrays_from_theta,
+    params_of_theta,
+    resolve_beta,
+    theta_box,
+)
+from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
+
+#: Relative slack the feasibility report allows: ``area <= budget*(1+TOL)``.
+FEASIBLE_RTOL = 1e-9
+
+#: Bisection iterations for the budget projection.  Each halves the shift
+#: interval; 64 puts the boundary within f64 resolution of the exact root.
+PROJECT_ITERS = 64
+
+
+# --------------------------------------------------------------------------- #
+# The budget projection (log-rate space, floor-aware, xp-generic)
+# --------------------------------------------------------------------------- #
+
+
+def budget_feasible(xp, m: K.MachineArrays, cost_model: CostModel,
+                    area_budget: Optional[float],
+                    power_budget: Optional[float], rtol: float = FEASIBLE_RTOL):
+    """Per-variant bool: every active budget satisfied to relative ``rtol``."""
+    ok = xp.ones_like(m.peak_flops, dtype=bool)
+    if area_budget is not None:
+        ok = ok & (cost_model.area(m) <= area_budget * (1.0 + rtol))
+    if power_budget is not None:
+        ok = ok & (cost_model.power(m) <= power_budget * (1.0 + rtol))
+    return ok
+
+
+def budget_violation(xp, m: K.MachineArrays, cost_model: CostModel,
+                     area_budget: Optional[float],
+                     power_budget: Optional[float]):
+    """Worst relative constraint violation per variant (0 = feasible)."""
+    v = xp.zeros_like(m.peak_flops)
+    if area_budget is not None:
+        v = xp.maximum(v, cost_model.area(m) / area_budget - 1.0)
+    if power_budget is not None:
+        v = xp.maximum(v, cost_model.power(m) / power_budget - 1.0)
+    return xp.maximum(v, 0.0)
+
+
+def project_to_budgets(
+    xp,
+    theta,
+    lo,
+    hi,
+    fixed: K.MachineArrays,
+    cost_model: CostModel,
+    area_budget: Optional[float],
+    power_budget: Optional[float] = None,
+    mask=None,
+    iters: int = PROJECT_ITERS,
+):
+    """Retract ``theta`` onto (span-clip box) ∩ (budget set), per variant.
+
+    The operator is ``theta -> max(clip(theta) - t*, lo)`` -- a uniform
+    downward log-shift of the (masked) columns, i.e. a multiplicative
+    rescale of the corresponding rates, floored at the box's lower edge --
+    with the smallest ``t* >= 0`` that satisfies every active budget,
+    found by bisection (both ``CostModel.area`` and ``.power`` are strictly
+    increasing in every rate, so feasibility is monotone in ``t``).
+
+    Properties (pinned in tests/test_constrained.py):
+      * the result is always inside the clip box;
+      * when a feasible point exists under the floor, the result satisfies
+        ``area <= budget`` (to f64 bisection resolution, well within
+        ``FEASIBLE_RTOL``);
+      * idempotent, and absorbs the span clip on either side -- i.e. the
+        clip and the projection commute through this combined operator.
+
+    ``mask`` (shape ``(D,)`` bool) restricts the shift to a column subset
+    (the rounding repair shifts rates while holding the rounded
+    ``ici_links`` column fixed).  Returns ``(theta_projected, feasible)``;
+    ``feasible`` is False only when even the floor violates a budget (the
+    floor point is still returned as the best effort).
+    """
+    th = xp.clip(theta, lo, hi)
+    if area_budget is None and power_budget is None:
+        return th, xp.ones_like(th[:, 0], dtype=bool)
+    if mask is None:
+        shift_mask = xp.ones_like(th[0])
+    else:
+        shift_mask = xp.asarray(mask).astype(th.dtype)
+
+    def at_shift(t):
+        return xp.where(shift_mask[None, :] > 0,
+                        xp.maximum(th - t[:, None], lo), th)
+
+    def feasible_at(t):
+        m = machine_arrays_from_theta(xp, at_shift(t), fixed)
+        # Feasibility at rtol=0: the bisection lands strictly inside the
+        # budget, leaving the report's FEASIBLE_RTOL as pure slack.
+        return budget_feasible(xp, m, cost_model, area_budget, power_budget,
+                               rtol=0.0)
+
+    zero = xp.zeros_like(th[:, 0])
+    ok0 = feasible_at(zero)
+    # Largest useful shift: every masked column at its floor.
+    t_floor = xp.max(xp.where(shift_mask[None, :] > 0, th - lo,
+                              xp.zeros_like(th)), axis=1)
+    ok_floor = feasible_at(t_floor)
+
+    def bisect_step(_, bracket):
+        t_lo, t_hi = bracket
+        mid = 0.5 * (t_lo + t_hi)
+        okm = feasible_at(mid)
+        return (xp.where(okm, t_lo, mid), xp.where(okm, mid, t_hi))
+
+    if xp.__name__ == "jax.numpy":
+        # Rolled loop under trace: one bisection body in the jaxpr instead
+        # of ``iters`` unrolled copies (an order of magnitude off the
+        # projected-mode compile time).
+        from jax import lax
+        t_lo, t_hi = lax.fori_loop(0, iters, bisect_step, (zero, t_floor))
+    else:
+        t_lo, t_hi = zero, t_floor
+        for i in range(iters):
+            t_lo, t_hi = bisect_step(i, (t_lo, t_hi))
+    # Return the feasible endpoint of the bracket; untouched where already
+    # feasible (exact idempotence), floor where nothing is feasible.
+    t_star = xp.where(ok0, zero, t_hi)
+    return at_shift(t_star), ok0 | ok_floor
+
+
+# --------------------------------------------------------------------------- #
+# Constrained descent: projected gradient + augmented Lagrangian
+# --------------------------------------------------------------------------- #
+
+
+def _validate_budgets(area_budget, power_budget):
+    if area_budget is None and power_budget is None:
+        raise ValueError(
+            "constrained_codesign needs area_budget and/or power_budget "
+            "(use grad_codesign for unconstrained descent)")
+    for name, b in (("area_budget", area_budget),
+                    ("power_budget", power_budget)):
+        if b is not None and not b > 0.0:
+            raise ValueError(f"{name} must be positive, got {b!r}")
+
+
+def _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
+              cost_model, mode, suffix, area_budget, power_budget,
+              violation_trace, feasible, objective_final,
+              selection_names=None) -> CodesignResult:
+    final_m = machine_arrays_from_theta(np, theta_np, fixed_np)
+    return CodesignResult(
+        names=list(mb.names),
+        objective_seed=np.asarray(history[0]),
+        objective_final=np.asarray(objective_final),
+        seed_params=[params_of_theta(theta0[i], fixed_np, i)
+                     for i in range(len(mb))],
+        final_params=[params_of_theta(theta_np[i], fixed_np, i)
+                      for i in range(len(mb))],
+        trajectory=np.stack(history, axis=0),
+        steps=steps,
+        w_area=w_area,
+        w_power=w_power,
+        mode=mode,
+        suffix=suffix,
+        area_budget=area_budget,
+        power_budget=power_budget,
+        area_final=np.asarray(cost_model.area(final_m)),
+        power_final=np.asarray(cost_model.power(final_m)),
+        feasible=np.asarray(feasible, dtype=bool),
+        violation_trace=(np.stack(violation_trace, axis=0)
+                         if violation_trace is not None else None),
+        selection_names=selection_names,
+    )
+
+
+def _round_links_with_repair(theta_np, lo, hi, fixed_np, cost_model,
+                             area_budget, power_budget, obj_np):
+    """Round the continuous ``log(ici_links)`` column both ways, re-project
+    the rate columns onto the budget for each rounding, keep the feasible
+    argmin (NumPy post-pass; returns the repaired theta and feasibility)."""
+    links_col = len(OPT_FIELDS)
+    rate_mask = np.array([True] * len(OPT_FIELDS) + [False])
+    links_cont = np.exp(theta_np[:, links_col])
+    # The span box bounds the CONTINUOUS relaxation; a rounded count must
+    # land on an integer inside it, so clamp to the integer sub-range
+    # [ceil(lo), floor(hi)] (floored at one link) -- clipping an integer
+    # to a fractional box edge would smuggle a non-integer count into the
+    # returned models.
+    lo_links = np.maximum(np.ceil(np.exp(lo[:, links_col]) - 1e-9), 1.0)
+    hi_links = np.maximum(np.floor(np.exp(hi[:, links_col]) + 1e-9),
+                          lo_links)
+    best_theta = theta_np.copy()
+    best_obj = np.full(theta_np.shape[0], np.inf)
+    best_feas = np.zeros(theta_np.shape[0], dtype=bool)
+    for rounder in (np.floor, np.ceil):
+        links = np.clip(rounder(links_cont), lo_links, hi_links)
+        cand = theta_np.copy()
+        cand[:, links_col] = np.log(links)
+        # Repair: rounding up raises area; shift the RATES back under the
+        # budget while holding the now-integral links column fixed.
+        cand, feas = project_to_budgets(
+            np, cand, lo, hi, fixed_np, cost_model, area_budget,
+            power_budget, mask=rate_mask)
+        # Rounding must not break integrality: the projection's mask keeps
+        # the links column fixed, so re-read it as the exact integer.
+        obj = obj_np(cand)
+        # Feasible candidates always beat infeasible ones; ties on
+        # feasibility resolve by objective.
+        better = (feas & ~best_feas) | (
+            (feas == best_feas) & (obj < best_obj))
+        best_theta = np.where(better[:, None], cand, best_theta)
+        best_obj = np.where(better, obj, best_obj)
+        best_feas = best_feas | feas
+    return best_theta, best_feas, best_obj
+
+
+def constrained_codesign(
+    profiles,
+    machines,
+    *,
+    area_budget: Optional[float] = None,
+    power_budget: Optional[float] = None,
+    mode: str = "projected",
+    steps: int = 100,
+    lr: float = 0.1,
+    span: float = 16.0,
+    beta=None,
+    beta_ref: int = 0,
+    timing_model: str = "serial",
+    eps: float = K.IDEAL_EPS,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    w_area: float = 0.1,
+    w_power: float = 0.05,
+    optimize_links: bool = False,
+    outer_iters: int = 6,
+    mu0: float = 10.0,
+    mu_growth: float = 4.0,
+) -> CodesignResult:
+    """Budgeted ``grad_codesign``: descend J subject to area/power budgets.
+
+    ``mode="projected"`` retracts every candidate onto the budget set (see
+    ``project_to_budgets``), so the whole trajectory is feasible and the
+    violation trace is identically zero.  ``mode="lagrangian"`` runs
+    ``outer_iters`` rounds of inner descent on the augmented objective with
+    dual/penalty updates in between (``steps`` is split across the rounds);
+    iterates may be infeasible mid-run, but the recorded per-round
+    violation trace is monotonically damped and a final projection makes
+    the returned machines feasible.  ``optimize_links`` relaxes
+    ``ici_links`` continuously and finishes with rounding-with-repair.
+
+    Example (tight budget: the optimum must stay at reference-chip area):
+
+    >>> from repro.core import VARIANTS, WorkloadProfile, constrained_codesign
+    >>> from repro.core.costmodel import CostModel
+    >>> from repro.core.sweep import MachineBatch
+    >>> apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+    ...                         collective_bytes={"all-reduce": 2e10},
+    ...                         num_devices=256, model_flops=5e16)]
+    >>> cd = constrained_codesign(apps, MachineBatch.from_models(VARIANTS),
+    ...                           area_budget=1.0, steps=5)
+    >>> cd.mode
+    'projected'
+    >>> bool((cd.area_final <= 1.0 + 1e-9).all())
+    True
+    >>> bool(cd.feasible.all())
+    True
+    """
+    _validate_budgets(area_budget, power_budget)
+    if mode not in ("projected", "lagrangian"):
+        raise ValueError(f"unknown constraint mode {mode!r}; "
+                         "have ('projected', 'lagrangian')")
+    backend = K.get_backend("jax")
+    jax, jnp = backend._jax, backend._jnp
+
+    pb, mb = _as_batches(profiles, machines)
+    fixed_np = mb.arrays()
+    beta_np = resolve_beta(pb, mb, beta, beta_ref)
+    theta0, lo, hi = theta_box(mb, span, optimize_links=optimize_links)
+    suffix = {"projected": "+proj", "lagrangian": "+lagr"}[mode]
+
+    with backend._x64():
+        p_arrays = backend.profile_arrays(pb.arrays())
+        fixed = backend.machine_arrays(fixed_np)
+        beta_j = backend.asarray(beta_np)
+        lo_j, hi_j = backend.asarray(lo), backend.asarray(hi)
+
+        def objective(theta):
+            m = machine_arrays_from_theta(jnp, theta, fixed)
+            return _objective_terms(jnp, p_arrays, m, beta_j, timing_model,
+                                    eps, cost_model, w_area, w_power)
+
+        def violation(theta):
+            m = machine_arrays_from_theta(jnp, theta, fixed)
+            return budget_violation(jnp, m, cost_model, area_budget,
+                                    power_budget)
+
+        def project(theta):
+            out, _ = project_to_budgets(jnp, theta, lo_j, hi_j, fixed,
+                                        cost_model, area_budget, power_budget)
+            return out
+
+        if mode == "projected":
+            theta, f_cur, history, vtrace, _ = backtracking_descent(
+                jax, jnp, backend.asarray(theta0), objective, steps, lr,
+                retract=project, aux_fn=violation)
+        else:
+            theta, history, vtrace = _lagrangian_descent(
+                jax, jnp, backend, theta0, lo_j, hi_j, objective, violation,
+                steps, lr, outer_iters, mu0, mu_growth)
+            # Safety net: the dual iterates approach feasibility from
+            # outside; project the final design so the returned machines
+            # honour the budget to FEASIBLE_RTOL exactly like projected
+            # mode does.
+            theta = project(theta)
+            vtrace.append(np.asarray(violation(theta)))
+            history.append(np.asarray(objective(theta)))
+
+        theta_np = backend.to_numpy(theta)
+        f_final = np.asarray(history[-1])
+
+    feasible = budget_feasible(
+        np, machine_arrays_from_theta(np, theta_np, fixed_np), cost_model,
+        area_budget, power_budget)
+
+    if optimize_links:
+        def obj_np(th):
+            m = machine_arrays_from_theta(np, th, fixed_np)
+            with np.errstate(divide="ignore", invalid="ignore"):
+                return _objective_terms(np, pb.arrays(), m, beta_np,
+                                        timing_model, eps, cost_model,
+                                        w_area, w_power)
+        theta_np, feasible, f_final = _round_links_with_repair(
+            theta_np, lo, hi, fixed_np, cost_model, area_budget,
+            power_budget, obj_np)
+        history.append(np.asarray(f_final))
+        vtrace.append(np.asarray(budget_violation(
+            np, machine_arrays_from_theta(np, theta_np, fixed_np),
+            cost_model, area_budget, power_budget)))
+
+    return _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area,
+                     w_power, cost_model, mode, suffix, area_budget,
+                     power_budget, vtrace, feasible, f_final)
+
+
+def _lagrangian_descent(jax, jnp, backend, theta0, lo_j, hi_j, objective,
+                        violation, steps, lr, outer_iters, mu0, mu_growth):
+    """Augmented-Lagrangian outer loop (inner loops share the one descent).
+
+    The violation trace is damped BY CONSTRUCTION: an outer iterate is
+    accepted per variant only when its violation does not exceed the best
+    seen so far; rejected variants keep their previous theta and get a
+    sharply increased penalty weight for the next round.
+    """
+    v = theta0.shape[0]
+    steps_inner = max(1, steps // max(outer_iters, 1))
+    theta = jnp.clip(backend.asarray(theta0), lo_j, hi_j)
+    lam = jnp.zeros((v,))
+    mu = jnp.full((v,), float(mu0))
+    lr_v = lr
+    v_best = violation(theta)
+    history = [np.asarray(objective(theta))]
+    vtrace = [np.asarray(v_best)]
+
+    # Multipliers enter as TRACED arguments (not fresh closures), and the
+    # jit cache is shared across outer rounds: the congruence graph
+    # compiles once for the whole Lagrangian run.
+    def augmented(th, lam_c, mu_c):
+        g = violation(th)  # relative violation, already relu'd
+        pen = 0.5 / mu_c * (jnp.maximum(lam_c + mu_c * g, 0.0) ** 2
+                            - lam_c ** 2)
+        return objective(th) + pen
+
+    jit_cache = {}
+    for _ in range(outer_iters):
+        cand, _, _, _, lr_v = backtracking_descent(
+            jax, jnp, theta, augmented, steps_inner, lr_v,
+            retract=lambda th: jnp.clip(th, lo_j, hi_j),
+            obj_args=(lam, mu), cache=jit_cache)
+        v_new = violation(cand)
+        ok = v_new <= v_best + 1e-12
+        theta = jnp.where(ok[:, None], cand, theta)
+        v_best = jnp.minimum(v_new, v_best)
+        lam = jnp.maximum(lam + mu * violation(theta), 0.0)
+        mu = jnp.where(ok, mu * mu_growth, mu * (mu_growth ** 2))
+        history.append(np.asarray(objective(theta)))
+        vtrace.append(np.asarray(v_best))
+    return theta, history, vtrace
+
+
+# --------------------------------------------------------------------------- #
+# Joint (machine, sharding-variant) descent
+# --------------------------------------------------------------------------- #
+
+
+def _flatten_groups(profile_groups) -> Tuple[list, np.ndarray, list]:
+    """Flatten app groups; returns (flat profiles, group ids, group names)."""
+    from repro.core.costs import WorkloadProfile
+
+    groups = list(profile_groups)
+    if groups and isinstance(groups[0], WorkloadProfile):
+        groups = [[p] for p in groups]  # flat list -> singleton groups
+    flat, gids = [], []
+    for g, members in enumerate(groups):
+        members = list(members)
+        if not members:
+            raise ValueError(f"profile group {g} is empty")
+        flat.extend(members)
+        gids.extend([g] * len(members))
+    return flat, np.asarray(gids, dtype=np.int64), groups
+
+
+def _hard_weights(agg: np.ndarray, gids: np.ndarray) -> np.ndarray:
+    """(A, V) one-hot-per-group selection weights from an aggregate matrix:
+    each (group, variant) pair puts weight 1/G on its argmin member."""
+    a, v = agg.shape
+    n_groups = int(gids.max()) + 1
+    w = np.zeros((a, v))
+    for g in range(n_groups):
+        rows = np.nonzero(gids == g)[0]
+        best = rows[np.argmin(agg[rows, :], axis=0)]          # (V,)
+        w[best, np.arange(v)] += 1.0 / n_groups
+    return w
+
+
+def joint_codesign(
+    profile_groups,
+    machines,
+    *,
+    mode: str = "alternate",
+    rounds: int = 4,
+    steps: int = 80,
+    lr: float = 0.1,
+    span: float = 16.0,
+    beta=None,
+    beta_ref: int = 0,
+    timing_model: str = "serial",
+    eps: float = K.IDEAL_EPS,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    w_area: float = 0.1,
+    w_power: float = 0.05,
+    area_budget: Optional[float] = None,
+    power_budget: Optional[float] = None,
+    temp0: float = 1.0,
+    temp_min: float = 0.05,
+) -> CodesignResult:
+    """Joint (machine, sharding-variant) descent through the same kernels.
+
+    ``profile_groups`` is a sequence of groups, each a sequence of
+    ``WorkloadProfile`` sharding variants of ONE application (a flat list
+    of profiles degrades to singleton groups == machine-only descent).
+    The objective is the scalarized J with the mean over apps replaced by
+    a per-(group, machine-variant) selection over group members:
+
+      * ``mode="alternate"`` -- harden the selection to the per-group
+        argmin under the current machine, descend machine log-rates for
+        ``steps/rounds`` steps, re-select, repeat.  Re-selection can only
+        lower the objective, so the round boundary is monotone.
+      * ``mode="softmax"`` -- relax the selection to a per-group softmax
+        with learnable logits, descend (log-rates, logits) SIMULTANEOUSLY,
+        annealing the temperature geometrically from ``temp0`` to
+        ``temp_min`` across rounds.
+
+    Both modes finish with a hard selection plus one machine-only polish
+    round under it, and report the chosen member per (machine variant,
+    group) in ``selection_names``.  Budgets (optional) apply through the
+    projected retraction, exactly as in ``constrained_codesign``.
+
+    Example (two sharding variants of one app; descent picks per machine):
+
+    >>> from repro.core import VARIANTS, WorkloadProfile, joint_codesign
+    >>> from repro.core.sweep import MachineBatch
+    >>> base = dict(flops=2e14, hbm_bytes=1.5e11, num_devices=256,
+    ...             model_flops=5e16)
+    >>> groups = [[WorkloadProfile(name="app0/tp",
+    ...                            collective_bytes={"all-reduce": 8e10},
+    ...                            **base),
+    ...            WorkloadProfile(name="app0/fsdp",
+    ...                            collective_bytes={"all-reduce": 1e10},
+    ...                            **base)]]
+    >>> cd = joint_codesign(groups, MachineBatch.from_models(VARIANTS),
+    ...                     rounds=2, steps=6)
+    >>> cd.mode
+    'joint-alternate'
+    >>> [len(sel) for sel in cd.selection_names]   # one pick per group
+    [1, 1, 1]
+    >>> bool((cd.improvement >= 0).all())
+    True
+    """
+    if mode not in ("alternate", "softmax"):
+        raise ValueError(f"unknown joint mode {mode!r}; "
+                         "have ('alternate', 'softmax')")
+    if area_budget is not None or power_budget is not None:
+        _validate_budgets(area_budget, power_budget)
+    backend = K.get_backend("jax")
+    jax, jnp = backend._jax, backend._jnp
+
+    flat, gids, groups = _flatten_groups(profile_groups)
+    n_groups = len(groups)
+    pb, mb = _as_batches(flat, machines)
+    fixed_np = mb.arrays()
+    # Beta is a per-APPLICATION target: every sharding variant of a group
+    # chases the same target (derived from the group's member 0 by default),
+    # and an explicit beta has group length, not flattened length.
+    first_rows = np.array([int(np.nonzero(gids == g)[0][0])
+                           for g in range(n_groups)])
+    if beta is None:
+        beta_np = resolve_beta(pb, mb, None, beta_ref)[first_rows][gids]
+    else:
+        beta_np = np.broadcast_to(
+            np.asarray(beta, dtype=np.float64), (n_groups,))[gids]
+    theta0, lo, hi = theta_box(mb, span)
+    n_rates = theta0.shape[1]
+    a_total, v = len(pb), len(mb)
+    # Per-group one-hot membership matrix for segment softmax: (A, G).
+    member = np.zeros((a_total, n_groups))
+    member[np.arange(a_total), gids] = 1.0
+    constrained = area_budget is not None or power_budget is not None
+
+    with backend._x64():
+        p_arrays = backend.profile_arrays(pb.arrays())
+        fixed = backend.machine_arrays(fixed_np)
+        beta_j = backend.asarray(beta_np)
+        lo_j, hi_j = backend.asarray(lo), backend.asarray(hi)
+        member_j = backend.asarray(member)
+
+        def retract_theta(th):
+            if constrained:
+                out, _ = project_to_budgets(
+                    jnp, th, lo_j, hi_j, fixed, cost_model, area_budget,
+                    power_budget)
+                return out
+            return jnp.clip(th, lo_j, hi_j)
+
+        def objective_with(th, weights):
+            m = machine_arrays_from_theta(jnp, th, fixed)
+            return _objective_terms(jnp, p_arrays, m, beta_j, timing_model,
+                                    eps, cost_model, w_area, w_power,
+                                    app_weights=weights)
+
+        def aggregate_np(th):
+            m = machine_arrays_from_theta(jnp, th, fixed)
+            out = K.congruence_kernel(jnp, p_arrays, m, beta_j, timing_model,
+                                      eps, clamp=False)
+            return np.asarray(out.aggregate)
+
+        theta = retract_theta(backend.asarray(theta0))
+        w_hard = _hard_weights(aggregate_np(theta), gids)
+        obj_seed = np.asarray(objective_with(theta, backend.asarray(w_hard)))
+        history: List[np.ndarray] = [obj_seed]
+        steps_round = max(1, steps // max(rounds + 1, 1))
+        lr_v = lr
+        # Best hard-selection iterate so far, per variant: the softmax
+        # rounds descend a RELAXED objective, so the hard objective may
+        # transiently regress; tracking the incumbent makes the reported
+        # result monotone vs the seed by construction.
+        best_theta, best_f = theta, jnp.asarray(obj_seed)
+
+        def track_best(theta, f_hard, best_theta, best_f):
+            """Keep the incumbent under the (already computed) hard-selection
+            objective of this round's boundary."""
+            f = jnp.asarray(f_hard)
+            better = f < best_f
+            return (jnp.where(better[:, None], theta, best_theta),
+                    jnp.minimum(f, best_f))
+
+        # Round-varying state (selection weights, softmax temperature)
+        # enters as traced arguments with a shared jit cache, so each mode
+        # compiles its objective once for the whole run.
+        weighted_cache: dict = {}
+
+        if mode == "alternate":
+            for _ in range(rounds):
+                theta, _, hist, _, lr_v = backtracking_descent(
+                    jax, jnp, theta, objective_with,
+                    steps_round, lr_v, retract=retract_theta,
+                    obj_args=(backend.asarray(w_hard),),
+                    cache=weighted_cache)
+                history.extend(hist[1:])
+                w_hard = _hard_weights(aggregate_np(theta), gids)
+                f_bound = np.asarray(
+                    objective_with(theta, backend.asarray(w_hard)))
+                history.append(f_bound)
+                best_theta, best_f = track_best(theta, f_bound,
+                                                best_theta, best_f)
+        else:
+            phi = jnp.zeros((v, a_total))
+            temps = np.geomspace(temp0, max(temp_min, 1e-6), max(rounds, 1))
+
+            def retract_params(params):
+                return jnp.concatenate(
+                    [retract_theta(params[:, :n_rates]), params[:, n_rates:]],
+                    axis=1)
+
+            def objective_soft(params, temp):
+                th = params[:, :n_rates]
+                logits = params[:, n_rates:].T          # (A, V)
+                e = jnp.exp(logits / temp)
+                denom = member_j @ (member_j.T @ e)     # (A, V) per-group
+                weights = e / denom / n_groups
+                return objective_with(th, weights)
+
+            soft_cache: dict = {}
+            for temp in temps:
+                params = jnp.concatenate([theta, phi], axis=1)
+                params, _, _, _, lr_v = backtracking_descent(
+                    jax, jnp, params, objective_soft, steps_round, lr_v,
+                    retract=retract_params,
+                    obj_args=(backend.asarray(float(temp)),),
+                    cache=soft_cache)
+                theta = params[:, :n_rates]
+                phi = params[:, n_rates:]
+                w_hard = _hard_weights(aggregate_np(theta), gids)
+                f_bound = np.asarray(
+                    objective_with(theta, backend.asarray(w_hard)))
+                history.append(f_bound)
+                best_theta, best_f = track_best(theta, f_bound,
+                                                best_theta, best_f)
+
+        # Final polish: machine-only descent under the incumbent's hard
+        # selection, starting FROM the incumbent (backtracking guarantees
+        # it never regresses past it).
+        theta = best_theta
+        w_hard = _hard_weights(aggregate_np(theta), gids)
+        theta, _, hist, _, _ = backtracking_descent(
+            jax, jnp, theta, objective_with,
+            steps_round, lr_v, retract=retract_theta,
+            obj_args=(backend.asarray(w_hard),), cache=weighted_cache)
+        history.extend(hist[1:])
+        theta_np = backend.to_numpy(theta)
+        # Re-select once more at the final machine so the reported
+        # objective, the selection and the trajectory tail all agree (the
+        # polish may have shifted which member wins; argmin re-selection
+        # only ever lowers the objective).
+        agg_final = aggregate_np(theta)
+        w_hard = _hard_weights(agg_final, gids)
+        f_cur = np.asarray(objective_with(theta, backend.asarray(w_hard)))
+        history.append(f_cur)
+
+    # Hard per-(variant, group) picks by profile name.
+    selection_names = []
+    for vi in range(v):
+        picks = []
+        for g in range(n_groups):
+            rows = np.nonzero(gids == g)[0]
+            picks.append(pb.names[rows[np.argmin(agg_final[rows, vi])]])
+        selection_names.append(picks)
+
+    final_m = machine_arrays_from_theta(np, theta_np, fixed_np)
+    feasible = (budget_feasible(np, final_m, cost_model, area_budget,
+                                power_budget)
+                if constrained else np.ones(v, dtype=bool))
+    vtrace = ([np.asarray(budget_violation(np, final_m, cost_model,
+                                           area_budget, power_budget))]
+              if constrained else None)
+    res = _finalize(
+        mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
+        cost_model, f"joint-{mode}", "+joint", area_budget, power_budget,
+        vtrace, feasible, np.asarray(f_cur), selection_names=selection_names)
+    if not constrained:
+        res.feasible = None
+        res.area_budget = res.power_budget = None
+    return res

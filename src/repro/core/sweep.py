@@ -573,6 +573,42 @@ class SweepResult:
         order = np.argsort(self.aggregate_mean(), kind="stable")
         return [int(i) for i in order[:k]]
 
+    def seed_codesign(self, k: Optional[int] = None,
+                      cost_model: CostModel = DEFAULT_COST_MODEL,
+                      ) -> MachineBatch:
+        """Pareto survivors as a warm-start seed for gradient co-design.
+
+        The sweep answers "which sampled designs win?"; its winners are
+        the natural SEEDS for the continuous descent in
+        ``repro.core.codesign`` / ``repro.core.constrained``.  Returns the
+        union of the 2-D and 3-D Pareto fronts (under ``cost_model``) plus
+        every per-app best fit, deduplicated, ordered by suite-mean
+        aggregate, optionally truncated to the best ``k`` -- ready to pass
+        straight to ``grad_codesign`` / ``constrained_codesign`` as
+        ``machines``.
+
+        >>> from repro.core import WorkloadProfile, run_sweep
+        >>> apps = [WorkloadProfile(name="app0", flops=2e14,
+        ...                         hbm_bytes=1.5e11,
+        ...                         collective_bytes={"all-reduce": 2e10},
+        ...                         num_devices=256, model_flops=5e16)]
+        >>> res = run_sweep(apps, n=64, seed=0)
+        >>> seeds = res.seed_codesign(k=4)
+        >>> 1 <= len(seeds) <= 4
+        True
+        >>> set(seeds.names) <= set(res.variant_names)
+        True
+        """
+        agg = self.aggregate_mean()
+        survivors = set(pareto_front_indices(cost_model.area(self.machines),
+                                             agg))
+        survivors.update(self.pareto_front_3d(cost_model))
+        survivors.update(int(i) for i in self.best_fit_indices())
+        order = sorted(survivors, key=lambda i: (agg[i], i))
+        if k is not None:
+            order = order[:k]
+        return self.machines.take(order)
+
     # ----------------------------- reports ---------------------------- #
 
     def markdown(self, top_k: int = 10,
@@ -887,6 +923,17 @@ class ShardedSweepResult:
 
     def pareto_names(self) -> List[str]:
         return [self.result.machines.names[i] for i in self.pareto_front()]
+
+    def seed_codesign(self, k: Optional[int] = None) -> MachineBatch:
+        """Pareto survivors as a warm-start seed for gradient co-design.
+
+        Delegates to ``SweepResult.seed_codesign`` over the survivor set
+        under the cost model the shards were pre-filtered with (the only
+        axes front-completeness holds for) -- so a mega-sweep's winners
+        feed ``grad_codesign`` / ``constrained_codesign`` exactly like a
+        single-device sweep's would.
+        """
+        return self.result.seed_codesign(k=k, cost_model=self.cost_model)
 
     # ----------------------------- reports ---------------------------- #
 

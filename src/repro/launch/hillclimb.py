@@ -29,6 +29,17 @@ Co-design modes (after the kernel substitution):
                  (congruence, area, power) objective through the shared
                  kernels_xp layer, descending machine log-rates from the
                  named-variant seeds.
+  --area-budget B / --power-budget P
+                 constrain --grad to CostModel.area(m) <= B (and/or
+                 power <= P) via repro.core.constrained; --constraint-mode
+                 picks projected gradient (default) or augmented
+                 Lagrangian, --opt-links relaxes ici_links continuously
+                 and rounds with repair.
+  --joint        joint (machine, sharding-variant) descent: compiles the
+                 cell under every sharding variant (tp/zero1/fsdp) and
+                 lets the descent pick per machine variant.  The kernel
+                 substitution applies to the primary --variant cell only;
+                 the other shardings enter as baseline compiles.
 """
 
 import argparse
@@ -158,17 +169,45 @@ def codesign_sweep(profile, n: int, seed: int = 0,
     }
 
 
-def codesign_grad(profile, steps: int, lr: float = 0.1) -> dict:
+def codesign_grad(profile, steps: int, lr: float = 0.1,
+                  area_budget: float = None, power_budget: float = None,
+                  constraint_mode: str = "projected",
+                  opt_links: bool = False) -> dict:
     """Gradient co-design: descend the scalarized (congruence, area, power)
     objective from the named-variant seeds by jax.grad through the shared
     kernels (``repro.core.codesign``); the optimized continuous designs
     answer "where should the machine move?" rather than "which sampled
-    point wins?"."""
+    point wins?".  With a budget the descent is constrained
+    (``repro.core.constrained``): projected-gradient or augmented-
+    Lagrangian, optionally relaxing ici_links with rounding-and-repair."""
     from repro.core.codesign import grad_codesign
+    from repro.core.constrained import constrained_codesign
     from repro.core.sweep import MachineBatch
 
-    res = grad_codesign([profile], MachineBatch.from_models(M.VARIANTS),
-                        steps=steps, lr=lr)
+    seeds = MachineBatch.from_models(M.VARIANTS)
+    if area_budget is None and power_budget is None:
+        res = grad_codesign([profile], seeds, steps=steps, lr=lr)
+    else:
+        res = constrained_codesign(
+            [profile], seeds, steps=steps, lr=lr, area_budget=area_budget,
+            power_budget=power_budget, mode=constraint_mode,
+            optimize_links=opt_links)
+    return res.to_json()
+
+
+def codesign_joint(profile_group, steps: int, lr: float = 0.1,
+                   area_budget: float = None,
+                   power_budget: float = None) -> dict:
+    """Joint (machine, sharding-variant) co-design over one app's group of
+    sharding-variant profiles (``repro.core.constrained.joint_codesign``,
+    alternation mode), optionally under the same budgets."""
+    from repro.core.constrained import joint_codesign
+    from repro.core.sweep import MachineBatch
+
+    res = joint_codesign([profile_group],
+                         MachineBatch.from_models(M.VARIANTS),
+                         steps=steps, lr=lr, area_budget=area_budget,
+                         power_budget=power_budget)
     return res.to_json()
 
 
@@ -184,6 +223,27 @@ def attention_layers(cfg) -> int:
     return cfg.n_layers
 
 
+def validate_codesign_args(parser, args) -> None:
+    """Reject inconsistent co-design flags at parse time (like --backend):
+    budgets must be positive, and every constrained/joint flag needs the
+    --grad mode it modifies -- not an error minutes into compile work."""
+    for name, value in (("--area-budget", args.area_budget),
+                        ("--power-budget", args.power_budget)):
+        if value is not None and not value > 0.0:
+            parser.error(f"{name} must be positive, got {value}")
+    has_budget = args.area_budget is not None or args.power_budget is not None
+    if (has_budget or args.joint or args.opt_links
+            or args.constraint_mode) and not args.grad:
+        parser.error("--area-budget/--power-budget/--constraint-mode/"
+                     "--opt-links/--joint require --grad STEPS")
+    if (args.constraint_mode or args.opt_links) and not has_budget:
+        parser.error("--constraint-mode/--opt-links require "
+                     "--area-budget and/or --power-budget")
+    if args.joint and (args.constraint_mode or args.opt_links):
+        parser.error("--joint supports budgets only through the projected "
+                     "retraction; drop --constraint-mode/--opt-links")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
@@ -194,6 +254,9 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="benchmarks/artifacts_opt")
     ap.add_argument("--tag", default=None)
     ap.add_argument("--mode", choices=("flash", "scan"), default="flash")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config for --arch (fast "
+                         "compiles; CI exercises the full pipeline)")
     ap.add_argument("--sp", choices=("on", "off"), default="on")
     ap.add_argument("--sweep", type=int, default=0, metavar="N",
                     help="after substitution, sweep N generated machine "
@@ -210,13 +273,30 @@ def main(argv=None) -> int:
                          "power) objective for STEPS steps")
     ap.add_argument("--grad-lr", type=float, default=0.1,
                     help="initial log-rate step size for --grad")
+    ap.add_argument("--area-budget", type=float, default=None, metavar="B",
+                    help="constrain --grad descent to CostModel.area <= B "
+                         "(repro.core.constrained)")
+    ap.add_argument("--power-budget", type=float, default=None, metavar="P",
+                    help="constrain --grad descent to CostModel.power <= P")
+    ap.add_argument("--constraint-mode", default=None,
+                    choices=("projected", "lagrangian"),
+                    help="budgeted-descent algorithm (default: projected); "
+                         "requires --area-budget/--power-budget")
+    ap.add_argument("--opt-links", action="store_true",
+                    help="relax ici_links continuously during --grad and "
+                         "round with repair (requires a budget)")
+    ap.add_argument("--joint", action="store_true",
+                    help="joint (machine, sharding-variant) descent: "
+                         "compile every sharding variant and let --grad "
+                         "choose per machine variant")
     args = ap.parse_args(argv)
     # Fail at parse time with the registry's current contents, not deep
     # inside get_backend() after minutes of compile work.
     from repro.core.kernels_xp import validate_backend_arg
     validate_backend_arg(ap, args.backend)
+    validate_codesign_args(ap, args)
 
-    cfg = C.get_config(args.arch)
+    cfg = C.get_config(args.arch, smoke=args.smoke)
     if args.moe_impl and cfg.moe is not None:
         cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, impl=args.moe_impl))
     shape = SHAPES[args.shape]
@@ -280,14 +360,46 @@ def main(argv=None) -> int:
               f"pareto={len(cd['pareto'])} points")
 
     if args.grad > 0:
-        # Continuous co-design: in which direction should the machine move?
-        gd = codesign_grad(profile, args.grad, lr=args.grad_lr)
-        profile.meta["grad_codesign"] = gd
-        lines = ", ".join(
-            f"{v['name']}: {v['objective_seed']:.4f}->"
-            f"{v['objective_final']:.4f}" for v in gd["variants"])
-        print(f"grad codesign ({gd['steps']} steps): {lines}; "
-              f"best={gd['best_variant']}")
+        if args.joint:
+            # Joint co-design: which (machine, sharding) pair wins?  The
+            # primary cell keeps its kernel substitution; the remaining
+            # sharding variants enter as baseline compiles.
+            group = [profile]
+            for sv in SH.SHARDING_VARIANTS:
+                if sv == variant:
+                    continue
+                alt = run_cell(cfg, shape, mesh, mesh_label, sv, None,
+                               multi_pod=multi_pod, verbose=False)
+                alt.name += f"@{sv}"
+                group.append(alt)
+            gd = codesign_joint(group, args.grad, lr=args.grad_lr,
+                                area_budget=args.area_budget,
+                                power_budget=args.power_budget)
+            profile.meta["joint_codesign"] = gd
+            print(f"joint codesign over {len(group)} shardings: "
+                  f"best={gd['best_variant']} picks="
+                  f"{gd['selection'][gd['best_variant']]}")
+        else:
+            # Continuous co-design: in which direction should the machine
+            # move (optionally under an area/power budget)?
+            gd = codesign_grad(
+                profile, args.grad, lr=args.grad_lr,
+                area_budget=args.area_budget,
+                power_budget=args.power_budget,
+                constraint_mode=args.constraint_mode or "projected",
+                opt_links=args.opt_links)
+            profile.meta["grad_codesign"] = gd
+            lines = ", ".join(
+                f"{v['name']}: {v['objective_seed']:.4f}->"
+                f"{v['objective_final']:.4f}" for v in gd["variants"])
+            print(f"grad codesign ({gd['steps']} steps, {gd['mode']}): "
+                  f"{lines}; best={gd['best_variant']}")
+            if "feasibility" in gd:
+                feas = gd["feasibility"]
+                print(f"feasibility ({feas['mode']}): "
+                      f"area_budget={feas['area_budget']} "
+                      f"power_budget={feas['power_budget']} "
+                      f"all_feasible={feas['all_feasible']}")
 
     if args.out:
         os.makedirs(args.out, exist_ok=True)

@@ -110,3 +110,102 @@ def test_codesign_result_best(result):
     assert isinstance(result, CodesignResult)
     assert result.best == int(np.argmin(result.objective_final))
     assert result.best_model().name == f"{result.names[result.best]}+grad"
+
+
+def test_grad_codesign_reports_final_silicon(result):
+    """The feasibility-report fields are populated even unconstrained:
+    final area/power under the run's cost model, no budget, no trace."""
+    from repro.core.costmodel import DEFAULT_COST_MODEL
+
+    models = result.models()
+    np.testing.assert_allclose(
+        result.area_final, [DEFAULT_COST_MODEL.area(m) for m in models],
+        rtol=1e-9)
+    np.testing.assert_allclose(
+        result.power_final, [DEFAULT_COST_MODEL.power(m) for m in models],
+        rtol=1e-9)
+    assert result.mode == "unconstrained"
+    assert result.feasible is None and result.violation_trace is None
+    assert result.feasibility_report() == {
+        "constrained": False, "mode": "unconstrained"}
+
+
+# --------------------------------------------------------------------------- #
+# Joint (machine, sharding-variant) descent vs machine-only: the ISSUE
+# acceptance gate on the 10 default profiles
+# --------------------------------------------------------------------------- #
+
+
+def default_profile_groups():
+    """The 10 default profiles (benchmarks.common.scaling_profiles) each
+    with three synthetic sharding layouts: member 0 is the default; the
+    others trade collective traffic against memory traffic the way
+    tp/zero1/fsdp layouts do."""
+    import dataclasses as _dc
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import common
+    groups = []
+    for p in common.scaling_profiles(10):
+        group = [p]
+        for k, (coll_f, mem_f) in enumerate(((0.4, 1.25), (2.2, 0.8)), 1):
+            q = _dc.replace(
+                p, name=f"{p.name}/v{k}",
+                hbm_bytes=p.hbm_bytes * mem_f,
+                bytes_accessed=p.bytes_accessed * mem_f,
+                collective_bytes={"all-reduce":
+                                  p.total_collective_bytes * coll_f},
+            )
+            group.append(q)
+        groups.append(group)
+    return groups
+
+
+def test_joint_beats_machine_only_on_default_profiles():
+    """Joint (machine, sharding-variant) descent must match or beat
+    machine-only descent on the per-profile scalarized objective for at
+    least 8 of the 10 default profiles (ISSUE 4 acceptance criterion).
+
+    Machine-only descends with every app pinned to its default sharding
+    (member 0); joint may re-select per (app, machine variant).  Both are
+    scored at their own best final machine: per-profile objective =
+    aggregate congruence of the (chosen) member + the shared silicon
+    terms.
+    """
+    from repro.core.constrained import joint_codesign
+    from repro.core.costmodel import DEFAULT_COST_MODEL
+    from repro.core.sweep import batched_congruence, default_beta_batched
+
+    groups = default_profile_groups()
+    seeds = MachineBatch.from_models(VARIANTS)
+    defaults = [g[0] for g in groups]
+    beta = default_beta_batched(defaults, seeds)
+
+    machine_only = grad_codesign(defaults, seeds, steps=40, beta=beta)
+    joint = joint_codesign(groups, seeds, rounds=3, steps=40, beta=beta)
+
+    def per_profile_objective(model, chosen):
+        res = batched_congruence(chosen, MachineBatch.from_models([model]),
+                                 beta=beta, clamp=False)
+        cm = DEFAULT_COST_MODEL
+        silicon = 0.1 * cm.area(model) + 0.05 * cm.power(model)
+        return res.aggregate[:, 0] + silicon
+
+    mo_best = machine_only.best_model()
+    j_best = joint.best_model()
+    picks = joint.selection_names[joint.best]
+    by_name = {p.name: p for g in groups for p in g}
+    j_chosen = [by_name[n] for n in picks]
+
+    mo_obj = per_profile_objective(mo_best, defaults)
+    j_obj = per_profile_objective(j_best, j_chosen)
+    wins = int(np.sum(j_obj <= mo_obj + 1e-9))
+    assert wins >= 8, (
+        f"joint beat machine-only on only {wins}/10 profiles "
+        f"(joint={j_obj}, machine_only={mo_obj})")
+    # The totals must agree with what each run reported for its best seed.
+    np.testing.assert_allclose(np.mean(j_obj), joint.objective_final[
+        joint.best], rtol=1e-6)
+    np.testing.assert_allclose(np.mean(mo_obj), machine_only.objective_final[
+        machine_only.best], rtol=1e-6)

@@ -1,0 +1,441 @@
+"""Constrained + joint co-design: feasibility invariants and the
+clip/projection order-of-operations regression.
+
+The load-bearing properties (the ISSUE acceptance gates):
+  * random budgets => the final machine is ALWAYS within budget to 1e-9
+    (hypothesis-driven on the projection operator, parametrized end-to-end
+    on full descents);
+  * the span clip and the budget projection commute through the combined
+    retraction (the order-of-operations bug class);
+  * the Lagrangian violation trace is monotonically damped;
+  * rounding-with-repair never returns an infeasible ``ici_links``.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised in minimal images
+    # Tier-1 must pass without the `dev` extra (pyproject declares hypothesis
+    # there, not in core deps).  Drive the same property-test bodies with a
+    # small deterministic sampler: both range endpoints plus seeded uniform
+    # draws for every @given float strategy (mirrors tests/test_congruence.py).
+    import random as _random
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        floats = _Floats
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**strategies):
+        def deco(fn):
+            def runner():
+                rng = _random.Random(0xBEEF)
+                for trial in range(32):
+                    kwargs = {}
+                    for name in sorted(strategies):
+                        s = strategies[name]
+                        if trial == 0:
+                            kwargs[name] = s.lo
+                        elif trial == 1:
+                            kwargs[name] = s.hi
+                        else:
+                            kwargs[name] = s.lo + (s.hi - s.lo) * rng.random()
+                    fn(**kwargs)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+from repro.core import VARIANTS, WorkloadProfile
+from repro.core.codesign import theta_box
+from repro.core.constrained import (
+    FEASIBLE_RTOL,
+    budget_feasible,
+    constrained_codesign,
+    joint_codesign,
+    project_to_budgets,
+)
+from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
+from repro.core.sweep import MachineBatch, run_sweep, shard_sweep
+from test_sweep import random_profiles
+
+SEEDS = MachineBatch.from_models(VARIANTS)
+FIXED = SEEDS.arrays()
+THETA0, LO, HI = theta_box(SEEDS, span=16.0)
+
+
+def _machines_of(theta):
+    from repro.core.codesign import machine_arrays_from_theta
+    return machine_arrays_from_theta(np, np.asarray(theta), FIXED)
+
+
+def _rng_theta(rng, scale=4.0):
+    """Random log-rates around the seeds, deliberately allowed OUTSIDE the
+    span box (the projection must absorb the clip)."""
+    return THETA0 + rng.uniform(-scale, scale, size=THETA0.shape)
+
+
+# --------------------------------------------------------------------------- #
+# The projection operator (hypothesis: random budgets => feasible to 1e-9)
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=64, deadline=None)
+@given(budget=st.floats(0.05, 4.0), jitter=st.floats(0.0, 6.0))
+def test_projection_feasible_for_random_budgets(budget, jitter):
+    """For ANY budget and any (even out-of-box) theta, the projected
+    machine satisfies area <= budget * (1 + 1e-9) whenever the budget is
+    attainable under the span floor."""
+    rng = np.random.default_rng(int(jitter * 1e6) % (2 ** 31))
+    theta = THETA0 + rng.uniform(-jitter, jitter, size=THETA0.shape)
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, budget)
+    area = DEFAULT_COST_MODEL.area(_machines_of(proj))
+    floor_area = DEFAULT_COST_MODEL.area(_machines_of(LO))
+    attainable = floor_area <= budget
+    assert np.array_equal(feasible, attainable)
+    assert np.all(area[attainable] <= budget * (1.0 + FEASIBLE_RTOL))
+    # Inside the box, always.
+    assert np.all(proj >= LO - 1e-12) and np.all(proj <= HI + 1e-12)
+
+
+@settings(max_examples=32, deadline=None)
+@given(area_b=st.floats(0.3, 3.0), power_b=st.floats(0.3, 3.0))
+def test_projection_respects_both_budgets(area_b, power_b):
+    rng = np.random.default_rng(7)
+    theta = _rng_theta(rng)
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, area_b, power_b)
+    m = _machines_of(proj)
+    ok = budget_feasible(np, m, DEFAULT_COST_MODEL, area_b, power_b)
+    assert np.all(ok[feasible])
+
+
+def test_projection_no_budget_is_plain_clip():
+    rng = np.random.default_rng(3)
+    theta = _rng_theta(rng)
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, None, None)
+    np.testing.assert_array_equal(proj, np.clip(theta, LO, HI))
+    assert np.all(feasible)
+
+
+def test_projection_leaves_feasible_points_untouched():
+    """Already-feasible in-box thetas pass through bit-exactly (t* = 0)."""
+    theta = LO + 0.25 * (HI - LO)       # deep inside the box, small rates
+    budget = float(DEFAULT_COST_MODEL.area(_machines_of(theta)).max()) * 2.0
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, budget)
+    np.testing.assert_array_equal(proj, theta)
+    assert np.all(feasible)
+
+
+# --------------------------------------------------------------------------- #
+# Clip/projection commute (the order-of-operations regression)
+# --------------------------------------------------------------------------- #
+
+
+def _P(theta, budget=1.0):
+    return project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, budget)[0]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("budget", [0.5, 1.0, 2.0])
+def test_clip_and_projection_commute(seed, budget):
+    """The combined retraction absorbs the span clip on either side:
+    P(clip(x)) == P(x) == clip(P(x)).  Descent code may therefore order
+    the two operators freely -- the bug class this pins is a projection
+    that lands outside the box (clip-after breaks the budget) or a clip
+    that re-inflates a projected design (budget-after breaks the box)."""
+    rng = np.random.default_rng(seed)
+    theta = _rng_theta(rng, scale=6.0)   # far outside the box on purpose
+    p = _P(theta, budget)
+    np.testing.assert_array_equal(p, _P(np.clip(theta, LO, HI), budget))
+    np.testing.assert_array_equal(p, np.clip(p, LO, HI))
+    # Idempotence: projecting a projected point is the identity.
+    np.testing.assert_array_equal(p, _P(p, budget))
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end feasibility: projected + Lagrangian descents
+# --------------------------------------------------------------------------- #
+
+
+@pytest.fixture(scope="module")
+def suite():
+    return random_profiles(4, seed=11)
+
+
+@pytest.mark.parametrize("mode", ["projected", "lagrangian"])
+@pytest.mark.parametrize("budget", [0.6, 1.0, 2.5])
+def test_constrained_final_machines_within_budget(suite, mode, budget):
+    """The ISSUE acceptance gate: both modes return machines with
+    CostModel.area(m) <= budget * (1 + 1e-9) on all named seeds."""
+    res = constrained_codesign(suite, SEEDS, area_budget=budget, mode=mode,
+                               steps=12, outer_iters=3)
+    cm = DEFAULT_COST_MODEL
+    for m in res.models():
+        assert cm.area(m) <= budget * (1.0 + FEASIBLE_RTOL)
+    assert np.all(res.feasible)
+    assert np.all(res.area_final <= budget * (1.0 + FEASIBLE_RTOL))
+    rep = res.feasibility_report()
+    assert rep["constrained"] and rep["all_feasible"]
+    assert rep["mode"] == mode
+
+
+def test_projected_trajectory_feasible_and_monotone(suite):
+    """Projected mode: EVERY accepted iterate is feasible (violation trace
+    identically zero) and the objective never increases."""
+    res = constrained_codesign(suite, SEEDS, area_budget=0.8, steps=15)
+    assert np.all(res.violation_trace == 0.0)
+    assert np.all(np.diff(res.trajectory, axis=0) <= 1e-12)
+
+
+def test_lagrangian_violation_trace_monotonically_damped(suite):
+    """Lagrangian mode may wander outside the budget, but the recorded
+    per-round violation never increases (damped by construction) and ends
+    at zero after the final safety projection."""
+    res = constrained_codesign(suite, SEEDS, area_budget=0.7,
+                               mode="lagrangian", steps=24, outer_iters=4)
+    trace = res.violation_trace
+    assert trace.shape[1] == len(SEEDS)
+    assert np.all(np.diff(trace, axis=0) <= 1e-12)
+    assert np.all(trace[-1] <= FEASIBLE_RTOL)
+    # denser/densest seeds start above a 0.7 budget: the trace must have
+    # something to damp, or this test pins nothing.
+    assert float(trace[0].max()) > 0.0
+
+
+def test_constrained_with_power_budget(suite):
+    res = constrained_codesign(suite, SEEDS, power_budget=1.2, steps=10)
+    assert np.all(res.power_final <= 1.2 * (1.0 + FEASIBLE_RTOL))
+    assert res.area_budget is None and res.power_budget == 1.2
+
+
+def test_constrained_validates_inputs(suite):
+    with pytest.raises(ValueError, match="area_budget and/or power_budget"):
+        constrained_codesign(suite, SEEDS, steps=2)
+    with pytest.raises(ValueError, match="must be positive"):
+        constrained_codesign(suite, SEEDS, area_budget=-1.0, steps=2)
+    with pytest.raises(ValueError, match="unknown constraint mode"):
+        constrained_codesign(suite, SEEDS, area_budget=1.0, mode="hope",
+                             steps=2)
+
+
+def test_custom_cost_model_budget(suite):
+    """Budgets are enforced under the CALLER's cost model, not the default."""
+    cm = CostModel(area_weights={"peak_flops": 3.0, "hbm_bw": 1.0})
+    res = constrained_codesign(suite, SEEDS, area_budget=0.9, steps=10,
+                               cost_model=cm)
+    for m in res.models():
+        assert cm.area(m) <= 0.9 * (1.0 + FEASIBLE_RTOL)
+
+
+# --------------------------------------------------------------------------- #
+# Integer relaxation: rounding-with-repair for ici_links
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("budget", [0.8, 1.5])
+def test_rounding_with_repair_feasible_integer_links(suite, budget):
+    """optimize_links relaxes ici_links continuously; the final models must
+    carry INTEGER link counts >= 1 and still satisfy the budget."""
+    res = constrained_codesign(suite, SEEDS, area_budget=budget, steps=12,
+                               optimize_links=True)
+    cm = DEFAULT_COST_MODEL
+    for params, m in zip(res.final_params, res.models()):
+        assert m.ici_links >= 1
+        # The repaired theta carries log(integer): exact after round-trip.
+        assert abs(params["ici_links"] - round(params["ici_links"])) < 1e-9
+        assert cm.area(m) <= budget * (1.0 + FEASIBLE_RTOL)
+    assert np.all(res.feasible)
+
+
+def test_rounding_repair_integer_even_with_fractional_box_floor(suite):
+    """Regression: a seed with many links makes the span box's lower edge
+    fractional (ici_links=24, span=16 => continuous floor 1.5).  The
+    repair must clamp rounded counts to the INTEGER sub-range, never to
+    the fractional box edge -- otherwise models() silently re-rounds and
+    the returned machine diverges from the reported feasibility fields."""
+    from repro.core.machine import TPU_V5E
+
+    seeds = MachineBatch.from_models(
+        [TPU_V5E.with_rates(name="linky", ici_links=24)])
+    res = constrained_codesign(suite, seeds, area_budget=1.0, steps=10,
+                               optimize_links=True)
+    links = res.final_params[0]["ici_links"]
+    assert links == round(links), links          # exactly integral
+    assert links >= 2                            # ceil(24/16) = 2, not 1.5
+    m = res.models()[0]
+    assert m.ici_links == int(links)
+    # Reported feasibility must describe the RETURNED model exactly.
+    assert abs(DEFAULT_COST_MODEL.area(m) - res.area_final[0]) < 1e-12
+    assert DEFAULT_COST_MODEL.area(m) <= 1.0 * (1.0 + FEASIBLE_RTOL)
+
+
+def test_rounding_repair_rescues_ceil_violation(suite):
+    """A budget that binds exactly at the continuous optimum: rounding up
+    would violate it, so the repair must re-project the rates.  Whatever
+    the rounding direction, the result stays feasible."""
+    res = constrained_codesign(suite, SEEDS, area_budget=0.55, steps=15,
+                               optimize_links=True)
+    assert np.all(res.area_final <= 0.55 * (1.0 + FEASIBLE_RTOL))
+    assert all(m.ici_links >= 1 for m in res.models())
+
+
+# --------------------------------------------------------------------------- #
+# Joint (machine, sharding-variant) descent
+# --------------------------------------------------------------------------- #
+
+
+def _sharding_groups(n=4, seed=23, members=3):
+    """Synthetic sharding-variant groups: member 0 is the 'default' layout;
+    the others trade collective traffic against memory traffic the way
+    tp/zero1/fsdp layouts do."""
+    apps = random_profiles(n, seed=seed)
+    groups = []
+    for p in apps:
+        group = [p]
+        for k in range(1, members):
+            q = WorkloadProfile(
+                name=f"{p.name}/v{k}",
+                flops=p.flops,
+                hbm_bytes=max(p.hbm_bytes, p.bytes_accessed) * (1 + 0.3 * k),
+                bytes_accessed=p.bytes_accessed * (1 + 0.3 * k),
+                collective_bytes={"all-reduce":
+                                  p.total_collective_bytes / (2.0 ** k)},
+                num_devices=p.num_devices,
+                model_flops=p.model_flops,
+            )
+            group.append(q)
+        groups.append(group)
+    return groups
+
+
+@pytest.mark.parametrize("mode", ["alternate", "softmax"])
+def test_joint_selection_valid_and_monotone(mode):
+    groups = _sharding_groups(3)
+    res = joint_codesign(groups, SEEDS, mode=mode, rounds=2, steps=9)
+    assert res.mode == f"joint-{mode}"
+    assert len(res.selection_names) == len(SEEDS)
+    for picks in res.selection_names:
+        assert len(picks) == len(groups)
+        for g, name in enumerate(picks):
+            assert name in [p.name for p in groups[g]]
+    assert np.all(res.improvement >= 0)
+
+
+def test_joint_under_budget_is_feasible():
+    groups = _sharding_groups(3)
+    res = joint_codesign(groups, SEEDS, rounds=2, steps=9, area_budget=0.9)
+    assert np.all(res.feasible)
+    assert np.all(res.area_final <= 0.9 * (1.0 + FEASIBLE_RTOL))
+
+
+def test_joint_flat_profiles_degrade_to_singletons():
+    """A flat profile list means singleton groups: selection is trivial and
+    the run reduces to machine-only descent."""
+    apps = random_profiles(2, seed=31)
+    res = joint_codesign(apps, SEEDS, rounds=1, steps=6)
+    assert all(picks == [p.name for p in apps]
+               for picks in res.selection_names)
+
+
+def test_joint_validates_mode():
+    with pytest.raises(ValueError, match="unknown joint mode"):
+        joint_codesign(random_profiles(1), SEEDS, mode="psychic", steps=2)
+
+
+# --------------------------------------------------------------------------- #
+# Sweep -> descent bridge (seed_codesign warm starts)
+# --------------------------------------------------------------------------- #
+
+
+def test_seed_codesign_bridge(suite):
+    res = run_sweep(suite, n=96, seed=5, include_named=VARIANTS)
+    seeds = res.seed_codesign(k=4)
+    assert 1 <= len(seeds) <= 4
+    assert set(seeds.names) <= set(res.variant_names)
+    # Survivors are ordered by suite-mean aggregate.
+    agg = {n: a for n, a in zip(res.variant_names, res.aggregate_mean())}
+    vals = [agg[n] for n in seeds.names]
+    assert vals == sorted(vals)
+    # And they warm-start a constrained descent end-to-end.
+    cd = constrained_codesign(suite, seeds, area_budget=1.0, steps=6)
+    assert np.all(cd.feasible)
+    assert np.all(cd.improvement >= 0)
+
+
+def test_seed_codesign_sharded_matches_single_device(suite):
+    single = run_sweep(suite, n=128, seed=2)
+    sharded = shard_sweep(suite, n=128, seed=2, num_shards=4)
+    assert sharded.seed_codesign(k=6).names == \
+        single.seed_codesign(k=6).names
+
+
+def test_seed_codesign_contains_fronts(suite):
+    res = run_sweep(suite, n=96, seed=5)
+    names = set(res.seed_codesign().names)
+    for i in res.pareto_front():
+        assert res.variant_names[i] in names
+    for i in res.pareto_front_3d():
+        assert res.variant_names[i] in names
+    for a in res.best_fit_indices():
+        assert res.variant_names[int(a)] in names
+
+
+# --------------------------------------------------------------------------- #
+# CLI parse-time validation (hillclimb co-design flags)
+# --------------------------------------------------------------------------- #
+
+
+def test_hillclimb_validates_codesign_args_at_parse_time():
+    import argparse
+
+    from repro.launch.hillclimb import validate_codesign_args
+
+    def args_of(**kw):
+        base = dict(grad=0, area_budget=None, power_budget=None,
+                    constraint_mode=None, opt_links=False, joint=False)
+        base.update(kw)
+        return argparse.Namespace(**base)
+
+    class Boom(Exception):
+        pass
+
+    class P(argparse.ArgumentParser):
+        def error(self, message):
+            raise Boom(message)
+
+    p = P()
+    validate_codesign_args(p, args_of())                       # no flags: ok
+    validate_codesign_args(p, args_of(grad=5, area_budget=1.0))
+    validate_codesign_args(p, args_of(grad=5, joint=True))
+    with pytest.raises(Boom, match="positive"):
+        validate_codesign_args(p, args_of(grad=5, area_budget=0.0))
+    with pytest.raises(Boom, match="require --grad"):
+        validate_codesign_args(p, args_of(area_budget=1.0))
+    with pytest.raises(Boom, match="require --grad"):
+        validate_codesign_args(p, args_of(joint=True))
+    with pytest.raises(Boom, match="area-budget and/or"):
+        validate_codesign_args(p, args_of(grad=5, opt_links=True))
+    with pytest.raises(Boom, match="area-budget and/or"):
+        validate_codesign_args(p, args_of(grad=5,
+                                          constraint_mode="lagrangian"))
+    # --joint composes with budgets only through the projected retraction;
+    # silently ignoring the other knobs would misreport the algorithm run.
+    with pytest.raises(Boom, match="projected retraction"):
+        validate_codesign_args(p, args_of(grad=5, joint=True,
+                                          area_budget=1.0, opt_links=True))
+    with pytest.raises(Boom, match="projected retraction"):
+        validate_codesign_args(p, args_of(grad=5, joint=True,
+                                          area_budget=1.0,
+                                          constraint_mode="lagrangian"))
