@@ -25,6 +25,10 @@ tables to benchmarks/out/ (consumed by EXPERIMENTS.md).
                           projected-gradient vs augmented-Lagrangian
                           descent under a fixed area budget (objective,
                           feasibility, wall-clock side by side).
+  frontier             -- feasibility frontier J*(budget): warm-started
+                          continuation vs n cold constrained runs over the
+                          same budget schedule (J* table, knee point,
+                          wall-clock ratio -- the continuation pin).
 
 ``--smoke`` runs every benchmark on tiny synthetic inputs with a single
 repeat so CI can exercise the whole harness in seconds.
@@ -329,6 +333,80 @@ def constrained_codesign_bench() -> None:
     common.write_out("constrained_codesign.md", "\n".join(md))
 
 
+def frontier_bench() -> None:
+    """Feasibility frontier: continuation vs cold restarts, same schedule.
+
+    Traces J*(budget) over a geometric budget schedule that actually BINDS
+    on the synthetic suite (the unconstrained optima sit near area
+    0.1-0.3, so the schedule spans the infeasible floor, the binding
+    region and the flat tail past the knee).  Warm-started continuation
+    and per-budget cold restarts run the same code path
+    (``frontier_codesign(warm_start=...)``); the wall-clock ratio is the
+    continuation pin -- the whole trace for little more than one run.
+    """
+    import numpy as np
+
+    from repro.core.frontier import frontier_codesign
+    from repro.core.sweep import MachineBatch
+
+    profiles = common.profiles_or_synthetic()[0]
+    seeds = MachineBatch.from_models(VARIANTS)
+    if common.SMOKE:
+        budgets = [0.1, 0.3, 1.0]
+        steps, refine = 8, 2
+    else:
+        budgets = [float(b) for b in np.geomspace(0.05, 1.0, 8)]
+        steps, refine = 120, 12
+    us_warm, warm = common.timeit(
+        frontier_codesign, profiles, seeds, budgets, steps=steps,
+        refine_steps=refine, repeat=1)
+    us_cold, cold = common.timeit(
+        frontier_codesign, profiles, seeds, budgets, steps=steps,
+        refine_steps=refine, warm_start=False, repeat=1)
+    n = len(warm)
+    steps_warm = steps + (n - 1) * refine
+    steps_cold = n * steps
+    ratio = us_cold / max(us_warm, 1e-9)
+    for i in range(n):
+        common.emit(
+            f"frontier/b{warm.budgets[i]:.3g}", us_warm / n,
+            f"J*={warm.objective[i]:.4f} cold_J*={cold.objective[i]:.4f} "
+            f"best={warm.best_names[i]} area={warm.area[i]:.3f} "
+            f"feasible={bool(warm.feasible[i])}")
+    common.emit("frontier/continuation_speedup", us_warm / max(steps_warm, 1),
+                f"warm_s={us_warm / 1e6:.2f} cold_s={us_cold / 1e6:.2f} "
+                f"speedup={ratio:.2f}x steps {steps_warm} vs {steps_cold}")
+
+    md = [f"feasibility frontier: {len(profiles)} apps, {len(seeds)} named "
+          f"seeds, {n} area budgets, {steps} full + {refine} refine steps",
+          "",
+          "| area budget | J* (continuation) | J* (cold restarts) "
+          "| best seed | area | power | feasible |",
+          "|---" * 7 + "|"]
+    for i in range(n):
+        md.append(
+            f"| {warm.budgets[i]:.4g} | {warm.objective[i]:.4f} "
+            f"| {cold.objective[i]:.4f} | {warm.best_names[i]} "
+            f"| {warm.area[i]:.3f} | {warm.power[i]:.3f} "
+            f"| {'yes' if warm.feasible[i] else 'NO'} |")
+    feas = warm.feasible
+    knee = f"{warm.knee():.4g}" if bool(feas.any()) else "n/a"
+    md += [
+        "",
+        f"knee (diminishing returns): budget {knee}",
+        f"wall-clock: continuation {us_warm / 1e6:.2f} s vs cold restarts "
+        f"{us_cold / 1e6:.2f} s -- **{ratio:.2f}x** ({steps_warm} vs "
+        f"{steps_cold} descent steps; both share one jitted "
+        f"objective/projection, the budget enters as a traced scalar)",
+        "",
+        "(J* is monotone non-increasing in the budget by construction -- "
+        "tighter-budget winners propagate to looser budgets whenever they "
+        "score better.  Infeasible rows mark budgets below the span-box "
+        "floor: no machine in the feasible box fits.  See docs/frontier.md "
+        "for the worked guide.)"]
+    common.write_out("frontier_codesign.md", "\n".join(md))
+
+
 BENCHMARKS = {
     "table1_congruence": table1_congruence,
     "fig3_radar": fig3_radar,
@@ -338,6 +416,7 @@ BENCHMARKS = {
     "sweep_scaling": sweep_scaling,
     "grad_codesign": grad_codesign_bench,
     "constrained_codesign": constrained_codesign_bench,
+    "frontier": frontier_bench,
 }
 
 

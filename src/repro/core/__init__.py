@@ -12,8 +12,12 @@ Public API:
   kernels_xp.get_backend                   -- numpy/jax/pallas kernel backends
   costmodel.CostModel                      -- area + power silicon proxies
   codesign.grad_codesign                   -- jax.grad machine co-design
-  constrained.constrained_codesign         -- area/power-budgeted descent
+  constrained.constrained_codesign         -- budgeted descent (area/power
+                                              budgets + per-subsystem
+                                              area envelopes)
   constrained.joint_codesign               -- joint machine+sharding descent
+  frontier.frontier_codesign               -- J*(budget) feasibility frontier
+                                              by warm-started continuation
 
 See docs/architecture.md for the layer map and docs/backends.md for the
 backend-authoring contract.
@@ -24,7 +28,9 @@ from repro.core.constrained import (
     constrained_codesign,
     joint_codesign,
     project_to_budgets,
+    validate_area_envelope,
 )
+from repro.core.frontier import FrontierResult, frontier_codesign
 from repro.core.congruence import (
     CongruenceReport,
     SCORE_NAMES,

@@ -131,7 +131,8 @@ def theta_box(machines, span: float, optimize_links: bool = False,
 def backtracking_descent(
     jax, jnp, theta0, obj_fn: Callable, steps: int, lr: float,
     retract: Callable, aux_fn: Optional[Callable] = None,
-    obj_args: Tuple = (), cache: Optional[Dict[str, Callable]] = None,
+    obj_args: Tuple = (), retract_args: Tuple = (),
+    cache: Optional[Dict[str, Callable]] = None,
 ) -> Tuple[object, object, List[np.ndarray], List[np.ndarray], object]:
     """Per-variant backtracking line search on ``obj_fn`` (shared by every
     co-design mode).
@@ -149,12 +150,15 @@ def backtracking_descent(
     ``obj_args`` are extra TRACED positional arguments forwarded to
     ``obj_fn(theta, *obj_args)``; round-varying state (Lagrange
     multipliers, selection weights, softmax temperature) belongs there,
-    not in a fresh closure per round.  With a ``cache`` dict (reused
-    across calls WITH THE SAME ``obj_fn``/``retract``), the jitted
-    obj/grad/retract compile once and later rounds retrace only on shape
-    changes.  Returns the final ``theta``, final per-variant objective,
-    the accepted-objective history (seed included), the aux history and
-    the adapted per-variant ``lr``.
+    not in a fresh closure per round.  ``retract_args`` do the same for
+    ``retract(theta, *retract_args)`` -- the budget-continuation frontier
+    (``repro.core.frontier``) passes the active budget as a traced scalar
+    so ONE compiled projection serves the whole budget sweep.  With a
+    ``cache`` dict (reused across calls WITH THE SAME
+    ``obj_fn``/``retract``), the jitted obj/grad/retract compile once and
+    later rounds retrace only on shape changes.  Returns the final
+    ``theta``, final per-variant objective, the accepted-objective history
+    (seed included), the aux history and the adapted per-variant ``lr``.
     """
     cache = {} if cache is None else cache
     if "obj" not in cache:
@@ -166,7 +170,7 @@ def backtracking_descent(
     obj_j, grad_j = cache["obj"], cache["grad"]
     retract_j, aux_j = cache["retract"], cache["aux"]
 
-    theta = retract_j(theta0)
+    theta = retract_j(theta0, *retract_args)
     f_cur = obj_j(theta, *obj_args)
     lr_v = jnp.broadcast_to(jnp.asarray(lr, dtype=theta.dtype),
                             (theta.shape[0],))
@@ -174,7 +178,7 @@ def backtracking_descent(
     aux = [] if aux_j is None else [np.asarray(aux_j(theta))]
     for _ in range(steps):
         g = grad_j(theta, *obj_args)
-        cand = retract_j(theta - lr_v[:, None] * g)
+        cand = retract_j(theta - lr_v[:, None] * g, *retract_args)
         f_new = obj_j(cand, *obj_args)
         ok = f_new < f_cur
         theta = jnp.where(ok[:, None], cand, theta)
@@ -222,6 +226,9 @@ class CodesignResult:
     suffix: str = "+grad"            # appended to optimized variant names
     area_budget: Optional[float] = None
     power_budget: Optional[float] = None
+    #: Per-subsystem area envelopes (PR 5): rate field -> budget on
+    #: ``CostModel.subsystem_area`` -- one extra constraint per entry.
+    area_envelope: Optional[Dict[str, float]] = None
     area_final: Optional[np.ndarray] = None      # (V,) CostModel.area
     power_final: Optional[np.ndarray] = None     # (V,) CostModel.power
     feasible: Optional[np.ndarray] = None        # (V,) bool, None = no budget
@@ -267,7 +274,8 @@ class CodesignResult:
         along the descent (0.0 everywhere for projected mode, damped toward
         0 for Lagrangian -- the trace itself is in ``violation_trace``).
         """
-        if self.area_budget is None and self.power_budget is None:
+        if (self.area_budget is None and self.power_budget is None
+                and not self.area_envelope):
             return {"constrained": False, "mode": self.mode}
         rep = {
             "constrained": True,
@@ -282,6 +290,8 @@ class CodesignResult:
                  "feasible": bool(self.feasible[i])}
                 for i, n in enumerate(self.names)],
         }
+        if self.area_envelope:
+            rep["area_envelope"] = dict(self.area_envelope)
         if self.violation_trace is not None and len(self.violation_trace):
             rep["max_violation"] = float(np.max(self.violation_trace))
             rep["final_violation"] = float(np.max(self.violation_trace[-1]))
@@ -304,7 +314,8 @@ class CodesignResult:
                     self.names, self.objective_seed, self.objective_final,
                     self.seed_params, self.final_params)],
         }
-        if self.area_budget is not None or self.power_budget is not None:
+        if (self.area_budget is not None or self.power_budget is not None
+                or self.area_envelope):
             blob["feasibility"] = self.feasibility_report()
         if self.selection_names is not None:
             blob["selection"] = {

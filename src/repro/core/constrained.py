@@ -36,16 +36,37 @@ heterogeneous-FPGA exploration treats as first-class:
     is repaired by re-projecting the rate columns onto the budget with the
     links column held fixed, and the feasible argmin wins -- so
     rounding-with-repair never returns an infeasible link count.
+  * **Per-subsystem area envelopes** (``area_envelope={"peak_flops": b1,
+    "hbm_bw": b2, ...}``) -- one extra constraint per entry, bounding
+    ``CostModel.subsystem_area(m, field) <= b`` (the subsystem's
+    provisioned throughput relative to the reference chip).  Envelopes
+    compose with the scalar budgets: the Lagrangian mode carries one
+    multiplier PER constraint, and both projections honour them (the
+    uniform shift through the monotone feasibility test; the Euclidean
+    projection by tightening the box, since each envelope caps one
+    log-rate column).  A single-key envelope budgets exactly what a
+    scalar ``area_budget`` under the single-key ``CostModel`` restriction
+    budgets -- pinned in tests/test_frontier.py.
+  * **True Euclidean projection** (``projection="euclidean"``) -- the
+    uniform log-shift retracts every rate by the same factor; the
+    per-coordinate weighted Euclidean projection instead solves
+    ``min ||theta' - theta||^2 s.t. budget(exp(theta')) <= B`` inside the
+    span box, via Newton on each coordinate's KKT stationarity nested in
+    a bisection on the constraint multiplier.  Floor-aware, idempotent,
+    and it commutes with the span clip exactly like the uniform shift --
+    both operator laws are pinned in tests/test_constrained.py.
 
 All modes reuse the one descent loop and the one traceable objective in
 ``repro.core.codesign`` -- the same ``kernels_xp`` math every sweep scores
 with -- and return the same ``CodesignResult`` (with the feasibility
-report populated).  ``docs/codesign.md`` is the worked guide.
+report populated).  ``docs/codesign.md`` is the worked guide;
+``repro.core.frontier`` traces whole budget *sweeps* over this module by
+warm-started continuation (``docs/frontier.md``).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -61,7 +82,7 @@ from repro.core.codesign import (
     resolve_beta,
     theta_box,
 )
-from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
+from repro.core.costmodel import DEFAULT_COST_MODEL, RATE_FIELDS, CostModel
 
 #: Relative slack the feasibility report allows: ``area <= budget*(1+TOL)``.
 FEASIBLE_RTOL = 1e-9
@@ -70,34 +91,114 @@ FEASIBLE_RTOL = 1e-9
 #: interval; 64 puts the boundary within f64 resolution of the exact root.
 PROJECT_ITERS = 64
 
+#: Inner Newton iterations for the Euclidean projection's per-coordinate
+#: KKT stationarity solve (quadratically convergent from the seed point).
+NEWTON_ITERS = 30
+
+#: Multiplier-bracketing growth steps for the Euclidean projection:
+#: 1e-6 * 8**25 > 1e16 covers every representable active constraint.
+BRACKET_ITERS = 25
+
 
 # --------------------------------------------------------------------------- #
-# The budget projection (log-rate space, floor-aware, xp-generic)
+# Constraint-set helpers (scalar budgets + per-subsystem envelopes)
 # --------------------------------------------------------------------------- #
+
+
+def validate_area_envelope(
+        envelope: Optional[Mapping[str, float]]) -> Optional[Dict[str, float]]:
+    """Normalize an ``area_envelope`` mapping (None/empty -> None).
+
+    Keys must name cost-model rate fields, values must be positive; the
+    returned dict is a plain copy so callers can stash it in results.
+
+    >>> validate_area_envelope({"peak_flops": 1.5})
+    {'peak_flops': 1.5}
+    >>> validate_area_envelope({}) is None
+    True
+    >>> validate_area_envelope({"mxu_count": 1.0})
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown area_envelope field 'mxu_count'; have ('peak_flops', 'hbm_bw', 'ici_bw_total', 'inter_pod_bw')
+    """
+    if not envelope:
+        return None
+    out: Dict[str, float] = {}
+    for field, b in envelope.items():
+        if field not in RATE_FIELDS:
+            raise ValueError(f"unknown area_envelope field {field!r}; "
+                             f"have {RATE_FIELDS}")
+        b = float(b)
+        if not b > 0.0:
+            raise ValueError(
+                f"area_envelope[{field!r}] must be positive, got {b!r}")
+        out[field] = b
+    return out
 
 
 def budget_feasible(xp, m: K.MachineArrays, cost_model: CostModel,
                     area_budget: Optional[float],
-                    power_budget: Optional[float], rtol: float = FEASIBLE_RTOL):
-    """Per-variant bool: every active budget satisfied to relative ``rtol``."""
+                    power_budget: Optional[float], rtol: float = FEASIBLE_RTOL,
+                    area_envelope: Optional[Mapping[str, float]] = None):
+    """Per-variant bool: every active constraint satisfied to relative
+    ``rtol`` (scalar area/power budgets plus per-subsystem envelopes)."""
     ok = xp.ones_like(m.peak_flops, dtype=bool)
     if area_budget is not None:
         ok = ok & (cost_model.area(m) <= area_budget * (1.0 + rtol))
     if power_budget is not None:
         ok = ok & (cost_model.power(m) <= power_budget * (1.0 + rtol))
+    if area_envelope:
+        for field in sorted(area_envelope):
+            ok = ok & (cost_model.subsystem_area(m, field)
+                       <= area_envelope[field] * (1.0 + rtol))
     return ok
+
+
+def budget_violations_vector(xp, m: K.MachineArrays, cost_model: CostModel,
+                             area_budget: Optional[float],
+                             power_budget: Optional[float],
+                             area_envelope: Optional[Mapping[str, float]]
+                             = None):
+    """``(V, C)`` relative violation per active constraint, relu'd.
+
+    Constraint order is static per configuration: scalar area, scalar
+    power, then envelope fields sorted by name -- the augmented-Lagrangian
+    mode keys one multiplier per column.
+    """
+    cols = []
+    if area_budget is not None:
+        cols.append(cost_model.area(m) / area_budget - 1.0)
+    if power_budget is not None:
+        cols.append(cost_model.power(m) / power_budget - 1.0)
+    if area_envelope:
+        for field in sorted(area_envelope):
+            cols.append(cost_model.subsystem_area(m, field)
+                        / area_envelope[field] - 1.0)
+    if not cols:
+        return xp.zeros_like(m.peak_flops)[:, None]
+    return xp.maximum(xp.stack(cols, axis=1), 0.0)
 
 
 def budget_violation(xp, m: K.MachineArrays, cost_model: CostModel,
                      area_budget: Optional[float],
-                     power_budget: Optional[float]):
+                     power_budget: Optional[float],
+                     area_envelope: Optional[Mapping[str, float]] = None):
     """Worst relative constraint violation per variant (0 = feasible)."""
-    v = xp.zeros_like(m.peak_flops)
-    if area_budget is not None:
-        v = xp.maximum(v, cost_model.area(m) / area_budget - 1.0)
-    if power_budget is not None:
-        v = xp.maximum(v, cost_model.power(m) / power_budget - 1.0)
-    return xp.maximum(v, 0.0)
+    return xp.max(budget_violations_vector(
+        xp, m, cost_model, area_budget, power_budget, area_envelope), axis=1)
+
+
+def _iterate(xp, body, init, iters: int):
+    """Run ``body(i, state) -> state`` ``iters`` times -- rolled under a
+    JAX trace (one loop body in the jaxpr, an order of magnitude off the
+    projected-mode compile time), a plain Python loop eagerly."""
+    if xp.__name__ == "jax.numpy":
+        from jax import lax
+        return lax.fori_loop(0, iters, body, init)
+    state = init
+    for i in range(iters):
+        state = body(i, state)
+    return state
 
 
 def project_to_budgets(
@@ -111,20 +212,33 @@ def project_to_budgets(
     power_budget: Optional[float] = None,
     mask=None,
     iters: int = PROJECT_ITERS,
+    area_envelope: Optional[Mapping[str, float]] = None,
+    method: str = "shift",
 ):
-    """Retract ``theta`` onto (span-clip box) ∩ (budget set), per variant.
+    """Retract ``theta`` onto (span-clip box) ∩ (constraint set), per variant.
 
-    The operator is ``theta -> max(clip(theta) - t*, lo)`` -- a uniform
-    downward log-shift of the (masked) columns, i.e. a multiplicative
-    rescale of the corresponding rates, floored at the box's lower edge --
-    with the smallest ``t* >= 0`` that satisfies every active budget,
-    found by bisection (both ``CostModel.area`` and ``.power`` are strictly
-    increasing in every rate, so feasibility is monotone in ``t``).
+    The constraint set intersects the scalar ``area_budget``/
+    ``power_budget`` sublevel sets with one per-subsystem cap per
+    ``area_envelope`` entry.  Two retraction operators are available:
 
-    Properties (pinned in tests/test_constrained.py):
+      * ``method="shift"`` (default) -- ``theta -> max(clip(theta) - t*,
+        lo)``: a uniform downward log-shift of the (masked) columns, i.e.
+        a multiplicative rescale of the corresponding rates, floored at
+        the box's lower edge, with the smallest ``t* >= 0`` that satisfies
+        every active constraint, found by bisection (every constraint
+        quantity is strictly increasing in every rate, so feasibility is
+        monotone in ``t``).
+      * ``method="euclidean"`` -- the true per-coordinate weighted
+        Euclidean projection in log-rate space (see
+        ``_project_euclidean``): the closest feasible point rather than a
+        uniform rescale, so a budget binding on one subsystem no longer
+        drags the others down with it.
+
+    Properties shared by both operators (pinned in
+    tests/test_constrained.py):
       * the result is always inside the clip box;
       * when a feasible point exists under the floor, the result satisfies
-        ``area <= budget`` (to f64 bisection resolution, well within
+        every constraint (to f64 bisection resolution, well within
         ``FEASIBLE_RTOL``);
       * idempotent, and absorbs the span clip on either side -- i.e. the
         clip and the projection commute through this combined operator.
@@ -132,12 +246,19 @@ def project_to_budgets(
     ``mask`` (shape ``(D,)`` bool) restricts the shift to a column subset
     (the rounding repair shifts rates while holding the rounded
     ``ici_links`` column fixed).  Returns ``(theta_projected, feasible)``;
-    ``feasible`` is False only when even the floor violates a budget (the
-    floor point is still returned as the best effort).
+    ``feasible`` is False only when even the floor violates a constraint
+    (the floor point is still returned as the best effort).
     """
     th = xp.clip(theta, lo, hi)
-    if area_budget is None and power_budget is None:
+    if area_budget is None and power_budget is None and not area_envelope:
         return th, xp.ones_like(th[:, 0], dtype=bool)
+    if method == "euclidean":
+        return _project_euclidean(xp, th, lo, hi, fixed, cost_model,
+                                  area_budget, power_budget, area_envelope,
+                                  mask, iters)
+    if method != "shift":
+        raise ValueError(f"unknown projection method {method!r}; "
+                         "have ('shift', 'euclidean')")
     if mask is None:
         shift_mask = xp.ones_like(th[0])
     else:
@@ -152,7 +273,7 @@ def project_to_budgets(
         # Feasibility at rtol=0: the bisection lands strictly inside the
         # budget, leaving the report's FEASIBLE_RTOL as pure slack.
         return budget_feasible(xp, m, cost_model, area_budget, power_budget,
-                               rtol=0.0)
+                               rtol=0.0, area_envelope=area_envelope)
 
     zero = xp.zeros_like(th[:, 0])
     ok0 = feasible_at(zero)
@@ -167,16 +288,7 @@ def project_to_budgets(
         okm = feasible_at(mid)
         return (xp.where(okm, t_lo, mid), xp.where(okm, mid, t_hi))
 
-    if xp.__name__ == "jax.numpy":
-        # Rolled loop under trace: one bisection body in the jaxpr instead
-        # of ``iters`` unrolled copies (an order of magnitude off the
-        # projected-mode compile time).
-        from jax import lax
-        t_lo, t_hi = lax.fori_loop(0, iters, bisect_step, (zero, t_floor))
-    else:
-        t_lo, t_hi = zero, t_floor
-        for i in range(iters):
-            t_lo, t_hi = bisect_step(i, (t_lo, t_hi))
+    t_lo, t_hi = _iterate(xp, bisect_step, (zero, t_floor), iters)
     # Return the feasible endpoint of the bracket; untouched where already
     # feasible (exact idempotence), floor where nothing is feasible.
     t_star = xp.where(ok0, zero, t_hi)
@@ -184,25 +296,206 @@ def project_to_budgets(
 
 
 # --------------------------------------------------------------------------- #
+# The Euclidean projection (per-coordinate KKT solve, log-rate space)
+# --------------------------------------------------------------------------- #
+
+
+def _area_posynomial(xp, cost_model: CostModel, fixed: K.MachineArrays):
+    """``CostModel.area`` over 4-column theta as ``(coeff, expo, offset)``:
+    ``area = sum_j coeff[:, j] * exp(expo[j] * theta[:, j])``.
+
+    ``ici_links`` is fixed here (the Euclidean path rejects the links
+    relaxation), so it folds into the ``ici_bw`` column's coefficient.
+    """
+    ref, w = cost_model.reference, cost_model.area_weights
+    tw = sum(w.get(f, 0.0) for f in RATE_FIELDS)
+    ones = xp.ones_like(fixed.ici_links)
+    coeff = xp.stack([
+        w.get("peak_flops", 0.0) / tw / ref.peak_flops * ones,
+        w.get("hbm_bw", 0.0) / tw / ref.hbm_bw * ones,
+        w.get("ici_bw_total", 0.0) / tw / ref.ici_bw_total * fixed.ici_links,
+        w.get("inter_pod_bw", 0.0) / tw / ref.inter_pod_bw * ones,
+    ], axis=1)
+    return coeff, xp.asarray([1.0, 1.0, 1.0, 1.0]), 0.0
+
+
+def _power_posynomial(xp, cost_model: CostModel, fixed: K.MachineArrays):
+    """``CostModel.power`` over 4-column theta, same ``(coeff, expo,
+    offset)`` shape; exponents carry the DVFS superlinearity and the
+    static term becomes a constant offset against the budget."""
+    ref, w = cost_model.reference, cost_model.power_weights
+    e = {f: cost_model.power_exponents.get(f, 1.0) for f in RATE_FIELDS}
+    tw = sum(w.get(f, 0.0) for f in RATE_FIELDS)
+    ones = xp.ones_like(fixed.ici_links)
+    coeff = xp.stack([
+        w.get("peak_flops", 0.0) / tw
+        / ref.peak_flops ** e["peak_flops"] * ones,
+        w.get("hbm_bw", 0.0) / tw / ref.hbm_bw ** e["hbm_bw"] * ones,
+        w.get("ici_bw_total", 0.0) / tw
+        * (fixed.ici_links / ref.ici_bw_total) ** e["ici_bw_total"],
+        w.get("inter_pod_bw", 0.0) / tw
+        / ref.inter_pod_bw ** e["inter_pod_bw"] * ones,
+    ], axis=1)
+    expo = xp.asarray([e["peak_flops"], e["hbm_bw"], e["ici_bw_total"],
+                       e["inter_pod_bw"]])
+    return coeff, expo, cost_model.static_power
+
+
+def _project_posynomial(xp, th, lo, hi, coeff, expo, budget, iters):
+    """Exact Euclidean projection of each theta row onto
+    ``{t in [lo, hi] : sum_j coeff_j * exp(expo_j * t_j) <= budget}``.
+
+    KKT with multiplier ``nu >= 0``: each coordinate solves the
+    stationarity ``t - x + nu * coeff * expo * exp(expo * t) = 0``
+    (convex, solved by Newton from ``t0 = x`` where the residual is
+    positive, so iterates descend monotonically onto the root), clipped
+    to the box -- the clipped solve IS the box-constrained coordinate
+    minimizer because objective and constraint are separable.  The
+    constraint value is strictly decreasing in ``nu``, so the active
+    multiplier is bracketed by geometric growth and pinned by bisection.
+    Zero-coefficient columns (cost-model weight 0, masked columns) have
+    zero stationarity correction and pass through untouched.
+    """
+    def g_of(t):
+        return xp.sum(coeff * xp.exp(expo[None, :] * t), axis=1)
+
+    def t_of(nu):
+        k = nu[:, None] * coeff * expo[None, :]
+
+        def newton(_, t):
+            ex = xp.exp(expo[None, :] * t)
+            return t - (t - th + k * ex) / (1.0 + k * expo[None, :] * ex)
+
+        return xp.clip(_iterate(xp, newton, th, NEWTON_ITERS), lo, hi)
+
+    ok0 = g_of(th) <= budget
+
+    def grow(_, nu):
+        return xp.where(g_of(t_of(nu)) <= budget, nu, nu * 8.0)
+
+    nu_hi = _iterate(xp, grow, 1e-6 * xp.ones_like(th[:, 0]), BRACKET_ITERS)
+
+    def bisect(_, bracket):
+        nu_lo, nu_up = bracket
+        mid = 0.5 * (nu_lo + nu_up)
+        okm = g_of(t_of(mid)) <= budget
+        return (xp.where(okm, nu_lo, mid), xp.where(okm, mid, nu_up))
+
+    _, nu_star = _iterate(
+        xp, bisect, (xp.zeros_like(nu_hi), nu_hi), iters)
+    # Feasible bracket endpoint; bit-exact pass-through when already
+    # feasible (idempotence).
+    return xp.where(ok0[:, None], th, t_of(nu_star))
+
+
+def _project_euclidean(xp, th, lo, hi, fixed, cost_model, area_budget,
+                       power_budget, area_envelope, mask, iters):
+    """Euclidean retraction onto box ∩ envelopes ∩ scalar budgets.
+
+    Envelope caps are exact per-coordinate upper bounds in log space, so
+    they tighten the box; each scalar budget then projects exactly via
+    ``_project_posynomial``.  With BOTH scalar budgets active the two
+    exact projections alternate (projections-onto-convex-sets); a final
+    uniform-shift pass guarantees the feasibility contract wherever the
+    alternation has not yet converged to 1e-9.
+    """
+    if th.shape[1] != len(OPT_FIELDS) or mask is not None:
+        raise ValueError(
+            "projection='euclidean' supports the 4 rate columns with no "
+            "column mask; use the default 'shift' projection with the "
+            "ici_links relaxation / rounding repair")
+    hi_eff = hi
+    if area_envelope:
+        ref = cost_model.reference
+        caps = {
+            "peak_flops": lambda b: xp.log(b * ref.peak_flops)
+            + xp.zeros_like(th[:, 0]),
+            "hbm_bw": lambda b: xp.log(b * ref.hbm_bw)
+            + xp.zeros_like(th[:, 0]),
+            "ici_bw_total": lambda b: xp.log(
+                b * ref.ici_bw_total / fixed.ici_links),
+            "inter_pod_bw": lambda b: xp.log(b * ref.inter_pod_bw)
+            + xp.zeros_like(th[:, 0]),
+        }
+        col = {f: j for j, f in
+               enumerate(("peak_flops", "hbm_bw", "ici_bw_total",
+                          "inter_pod_bw"))}
+        cap_mat = xp.full_like(th, xp.inf)
+        for field in sorted(area_envelope):
+            j = col[field]
+            cap_col = caps[field](area_envelope[field])
+            cap_mat = _set_column(xp, cap_mat, j,
+                                  xp.minimum(cap_mat[:, j], cap_col))
+        # A cap below the box floor leaves no feasible point; pin the
+        # column at the floor and let the feasibility flag report it.
+        hi_eff = xp.maximum(xp.minimum(hi, cap_mat), lo)
+    out = xp.clip(th, lo, hi_eff)
+
+    constraints = []
+    if area_budget is not None:
+        coeff, expo, off = _area_posynomial(xp, cost_model, fixed)
+        constraints.append((coeff, expo, area_budget - off))
+    if power_budget is not None:
+        coeff, expo, off = _power_posynomial(xp, cost_model, fixed)
+        constraints.append((coeff, expo, power_budget - off))
+
+    cycles = 1 if len(constraints) <= 1 else 6
+    for _ in range(cycles):
+        for coeff, expo, b in constraints:
+            out = _project_posynomial(xp, out, lo, hi_eff, coeff, expo, b,
+                                      iters)
+
+    def feasible(t):
+        m = machine_arrays_from_theta(xp, t, fixed)
+        return budget_feasible(xp, m, cost_model, area_budget, power_budget,
+                               rtol=0.0, area_envelope=area_envelope)
+
+    ok = feasible(out)
+    if len(constraints) > 1:
+        # POCS converges to the intersection only in the limit; the shift
+        # operator is the guaranteed-feasible fallback for the (rare)
+        # variants still outside after the alternation cycles.
+        fallback, _ = project_to_budgets(
+            xp, out, lo, hi_eff, fixed, cost_model, area_budget,
+            power_budget, iters=iters, area_envelope=area_envelope,
+            method="shift")
+        out = xp.where(ok[:, None], out, fallback)
+        ok = feasible(out)
+    ok_floor = feasible(xp.clip(lo, lo, hi_eff))
+    return out, ok | ok_floor
+
+
+def _set_column(xp, a, j: int, col):
+    """Functional column assignment (works for NumPy and traced JAX)."""
+    if xp.__name__ == "jax.numpy":
+        return a.at[:, j].set(col)
+    a = a.copy()
+    a[:, j] = col
+    return a
+
+
+# --------------------------------------------------------------------------- #
 # Constrained descent: projected gradient + augmented Lagrangian
 # --------------------------------------------------------------------------- #
 
 
-def _validate_budgets(area_budget, power_budget):
-    if area_budget is None and power_budget is None:
+def _validate_budgets(area_budget, power_budget, area_envelope=None):
+    if (area_budget is None and power_budget is None
+            and not area_envelope):
         raise ValueError(
-            "constrained_codesign needs area_budget and/or power_budget "
-            "(use grad_codesign for unconstrained descent)")
+            "constrained_codesign needs area_budget, power_budget and/or "
+            "area_envelope (use grad_codesign for unconstrained descent)")
     for name, b in (("area_budget", area_budget),
                     ("power_budget", power_budget)):
         if b is not None and not b > 0.0:
             raise ValueError(f"{name} must be positive, got {b!r}")
+    return validate_area_envelope(area_envelope)
 
 
 def _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
               cost_model, mode, suffix, area_budget, power_budget,
               violation_trace, feasible, objective_final,
-              selection_names=None) -> CodesignResult:
+              selection_names=None, area_envelope=None) -> CodesignResult:
     final_m = machine_arrays_from_theta(np, theta_np, fixed_np)
     return CodesignResult(
         names=list(mb.names),
@@ -220,6 +513,7 @@ def _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
         suffix=suffix,
         area_budget=area_budget,
         power_budget=power_budget,
+        area_envelope=area_envelope,
         area_final=np.asarray(cost_model.area(final_m)),
         power_final=np.asarray(cost_model.power(final_m)),
         feasible=np.asarray(feasible, dtype=bool),
@@ -230,7 +524,8 @@ def _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
 
 
 def _round_links_with_repair(theta_np, lo, hi, fixed_np, cost_model,
-                             area_budget, power_budget, obj_np):
+                             area_budget, power_budget, obj_np,
+                             area_envelope=None):
     """Round the continuous ``log(ici_links)`` column both ways, re-project
     the rate columns onto the budget for each rounding, keep the feasible
     argmin (NumPy post-pass; returns the repaired theta and feasibility)."""
@@ -254,9 +549,12 @@ def _round_links_with_repair(theta_np, lo, hi, fixed_np, cost_model,
         cand[:, links_col] = np.log(links)
         # Repair: rounding up raises area; shift the RATES back under the
         # budget while holding the now-integral links column fixed.
+        # The 5-column theta carries the rounded links in its last column,
+        # so every constraint (the ici_bw_total envelope included) is
+        # re-checked against the INTEGER link count during the repair.
         cand, feas = project_to_budgets(
             np, cand, lo, hi, fixed_np, cost_model, area_budget,
-            power_budget, mask=rate_mask)
+            power_budget, mask=rate_mask, area_envelope=area_envelope)
         # Rounding must not break integrality: the projection's mask keeps
         # the links column fixed, so re-read it as the exact integer.
         obj = obj_np(cand)
@@ -276,7 +574,9 @@ def constrained_codesign(
     *,
     area_budget: Optional[float] = None,
     power_budget: Optional[float] = None,
+    area_envelope: Optional[Mapping[str, float]] = None,
     mode: str = "projected",
+    projection: str = "shift",
     steps: int = 100,
     lr: float = 0.1,
     span: float = 16.0,
@@ -292,17 +592,25 @@ def constrained_codesign(
     mu0: float = 10.0,
     mu_growth: float = 4.0,
 ) -> CodesignResult:
-    """Budgeted ``grad_codesign``: descend J subject to area/power budgets.
+    """Budgeted ``grad_codesign``: descend J subject to silicon budgets.
 
-    ``mode="projected"`` retracts every candidate onto the budget set (see
-    ``project_to_budgets``), so the whole trajectory is feasible and the
-    violation trace is identically zero.  ``mode="lagrangian"`` runs
-    ``outer_iters`` rounds of inner descent on the augmented objective with
-    dual/penalty updates in between (``steps`` is split across the rounds);
-    iterates may be infeasible mid-run, but the recorded per-round
-    violation trace is monotonically damped and a final projection makes
-    the returned machines feasible.  ``optimize_links`` relaxes
-    ``ici_links`` continuously and finishes with rounding-with-repair.
+    The constraint set is any mix of a scalar ``area_budget``, a scalar
+    ``power_budget`` and per-subsystem ``area_envelope`` caps
+    (``{"peak_flops": b1, "hbm_bw": b2, ...}``, each bounding
+    ``CostModel.subsystem_area``).  ``mode="projected"`` retracts every
+    candidate onto the constraint set (see ``project_to_budgets``;
+    ``projection="euclidean"`` swaps the uniform log-shift for the true
+    per-coordinate Euclidean projection), so the whole trajectory is
+    feasible and the violation trace is identically zero.
+    ``mode="lagrangian"`` runs ``outer_iters`` rounds of inner descent on
+    the augmented objective -- one multiplier PER constraint -- with
+    dual/penalty updates in between (``steps`` is split across the
+    rounds); iterates may be infeasible mid-run, but the recorded
+    per-round violation trace is monotonically damped and a final
+    projection makes the returned machines feasible.  ``optimize_links``
+    relaxes ``ici_links`` continuously and finishes with
+    rounding-with-repair (shift projection only -- the Euclidean path has
+    no links column).
 
     Example (tight budget: the optimum must stay at reference-chip area):
 
@@ -320,11 +628,33 @@ def constrained_codesign(
     True
     >>> bool(cd.feasible.all())
     True
+
+    A per-subsystem envelope is one more constraint per entry -- here no
+    machine may provision more than 80% of the reference HBM bandwidth:
+
+    >>> from repro.core.costmodel import DEFAULT_COST_MODEL
+    >>> env = constrained_codesign(apps, MachineBatch.from_models(VARIANTS),
+    ...                            area_envelope={"hbm_bw": 0.8}, steps=5,
+    ...                            projection="euclidean")
+    >>> [bool(DEFAULT_COST_MODEL.subsystem_area(m, "hbm_bw")
+    ...       <= 0.8 * (1 + 1e-9)) for m in env.models()]
+    [True, True, True]
+    >>> env.feasibility_report()["area_envelope"]
+    {'hbm_bw': 0.8}
     """
-    _validate_budgets(area_budget, power_budget)
+    area_envelope = _validate_budgets(area_budget, power_budget,
+                                      area_envelope)
     if mode not in ("projected", "lagrangian"):
         raise ValueError(f"unknown constraint mode {mode!r}; "
                          "have ('projected', 'lagrangian')")
+    if projection not in ("shift", "euclidean"):
+        raise ValueError(f"unknown projection {projection!r}; "
+                         "have ('shift', 'euclidean')")
+    if projection == "euclidean" and optimize_links:
+        raise ValueError(
+            "projection='euclidean' does not compose with optimize_links "
+            "(the links column needs the masked shift repair); use the "
+            "default projection='shift'")
     backend = K.get_backend("jax")
     jax, jnp = backend._jax, backend._jnp
 
@@ -348,11 +678,18 @@ def constrained_codesign(
         def violation(theta):
             m = machine_arrays_from_theta(jnp, theta, fixed)
             return budget_violation(jnp, m, cost_model, area_budget,
-                                    power_budget)
+                                    power_budget, area_envelope)
+
+        def violations_vec(theta):
+            m = machine_arrays_from_theta(jnp, theta, fixed)
+            return budget_violations_vector(jnp, m, cost_model, area_budget,
+                                            power_budget, area_envelope)
 
         def project(theta):
             out, _ = project_to_budgets(jnp, theta, lo_j, hi_j, fixed,
-                                        cost_model, area_budget, power_budget)
+                                        cost_model, area_budget, power_budget,
+                                        area_envelope=area_envelope,
+                                        method=projection)
             return out
 
         if mode == "projected":
@@ -362,7 +699,7 @@ def constrained_codesign(
         else:
             theta, history, vtrace = _lagrangian_descent(
                 jax, jnp, backend, theta0, lo_j, hi_j, objective, violation,
-                steps, lr, outer_iters, mu0, mu_growth)
+                violations_vec, steps, lr, outer_iters, mu0, mu_growth)
             # Safety net: the dual iterates approach feasibility from
             # outside; project the final design so the returned machines
             # honour the budget to FEASIBLE_RTOL exactly like projected
@@ -376,7 +713,7 @@ def constrained_codesign(
 
     feasible = budget_feasible(
         np, machine_arrays_from_theta(np, theta_np, fixed_np), cost_model,
-        area_budget, power_budget)
+        area_budget, power_budget, area_envelope=area_envelope)
 
     if optimize_links:
         def obj_np(th):
@@ -387,30 +724,37 @@ def constrained_codesign(
                                         w_area, w_power)
         theta_np, feasible, f_final = _round_links_with_repair(
             theta_np, lo, hi, fixed_np, cost_model, area_budget,
-            power_budget, obj_np)
+            power_budget, obj_np, area_envelope=area_envelope)
         history.append(np.asarray(f_final))
         vtrace.append(np.asarray(budget_violation(
             np, machine_arrays_from_theta(np, theta_np, fixed_np),
-            cost_model, area_budget, power_budget)))
+            cost_model, area_budget, power_budget, area_envelope)))
 
     return _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area,
                      w_power, cost_model, mode, suffix, area_budget,
-                     power_budget, vtrace, feasible, f_final)
+                     power_budget, vtrace, feasible, f_final,
+                     area_envelope=area_envelope)
 
 
 def _lagrangian_descent(jax, jnp, backend, theta0, lo_j, hi_j, objective,
-                        violation, steps, lr, outer_iters, mu0, mu_growth):
+                        violation, violations_vec, steps, lr, outer_iters,
+                        mu0, mu_growth):
     """Augmented-Lagrangian outer loop (inner loops share the one descent).
 
-    The violation trace is damped BY CONSTRUCTION: an outer iterate is
-    accepted per variant only when its violation does not exceed the best
-    seen so far; rejected variants keep their previous theta and get a
-    sharply increased penalty weight for the next round.
+    One multiplier PER constraint (``violations_vec`` columns: scalar
+    area, scalar power, then each envelope field), so a binding HBM
+    envelope grows its own dual weight without inflating the pressure on
+    an easily-satisfied total-area budget.  The violation trace (the max
+    over constraints) is damped BY CONSTRUCTION: an outer iterate is
+    accepted per variant only when its worst violation does not exceed the
+    best seen so far; rejected variants keep their previous theta and get
+    a sharply increased penalty weight for the next round.
     """
     v = theta0.shape[0]
     steps_inner = max(1, steps // max(outer_iters, 1))
     theta = jnp.clip(backend.asarray(theta0), lo_j, hi_j)
-    lam = jnp.zeros((v,))
+    n_constraints = int(violations_vec(theta).shape[1])
+    lam = jnp.zeros((v, n_constraints))
     mu = jnp.full((v,), float(mu0))
     lr_v = lr
     v_best = violation(theta)
@@ -421,9 +765,10 @@ def _lagrangian_descent(jax, jnp, backend, theta0, lo_j, hi_j, objective,
     # jit cache is shared across outer rounds: the congruence graph
     # compiles once for the whole Lagrangian run.
     def augmented(th, lam_c, mu_c):
-        g = violation(th)  # relative violation, already relu'd
-        pen = 0.5 / mu_c * (jnp.maximum(lam_c + mu_c * g, 0.0) ** 2
-                            - lam_c ** 2)
+        g = violations_vec(th)  # (V, C) relative violations, already relu'd
+        pen = 0.5 / mu_c * jnp.sum(
+            jnp.maximum(lam_c + mu_c[:, None] * g, 0.0) ** 2 - lam_c ** 2,
+            axis=1)
         return objective(th) + pen
 
     jit_cache = {}
@@ -436,7 +781,7 @@ def _lagrangian_descent(jax, jnp, backend, theta0, lo_j, hi_j, objective,
         ok = v_new <= v_best + 1e-12
         theta = jnp.where(ok[:, None], cand, theta)
         v_best = jnp.minimum(v_new, v_best)
-        lam = jnp.maximum(lam + mu * violation(theta), 0.0)
+        lam = jnp.maximum(lam + mu[:, None] * violations_vec(theta), 0.0)
         mu = jnp.where(ok, mu * mu_growth, mu * (mu_growth ** 2))
         history.append(np.asarray(objective(theta)))
         vtrace.append(np.asarray(v_best))

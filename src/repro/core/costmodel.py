@@ -100,6 +100,32 @@ class CostModel:
         return sum(self.area_weights.get(f, 0.0) * norms[f]
                    for f in RATE_FIELDS) / total_w
 
+    def subsystem_area(self, machines, field: str):
+        """One subsystem's relative area: ``rate_field / reference rate``.
+
+        This is the quantity a per-subsystem area *envelope* budgets
+        (``constrained_codesign(area_envelope={field: b})`` keeps it
+        ``<= b``).  The ``area_weights`` deliberately do not enter: an
+        envelope bounds the subsystem's provisioned throughput directly,
+        while the weights only say how subsystems aggregate into the one
+        scalar die-area proxy.  Consequence: a single-key envelope on
+        ``field`` budgets exactly what a scalar ``area_budget`` under
+        ``CostModel(area_weights={field: 1.0})`` budgets -- the
+        consistency pinned in tests/test_frontier.py.
+
+        >>> from repro.core import CostModel, TPU_V5E
+        >>> cm = CostModel()
+        >>> float(cm.subsystem_area(TPU_V5E, "peak_flops"))
+        1.0
+        >>> single = CostModel(area_weights={"hbm_bw": 1.0})
+        >>> denser = TPU_V5E.with_rates(name="2x", hbm_bw=2 * TPU_V5E.hbm_bw)
+        >>> float(cm.subsystem_area(denser, "hbm_bw")) == float(single.area(denser))
+        True
+        """
+        if field not in RATE_FIELDS:
+            raise KeyError(f"unknown rate field {field!r}; have {RATE_FIELDS}")
+        return getattr(machines, field) / getattr(self.reference, field)
+
     def power(self, machines):
         """Relative dynamic power proxy (1.0 + static at the reference)."""
         norms = self._norms(machines)

@@ -1,0 +1,412 @@
+"""Feasibility frontier J*(budget): warm-started budget continuation.
+
+``constrained_codesign`` answers "what is the best machine under THIS
+budget?"; early design exploration asks the inverse question -- "how much
+fabric do I actually need?" -- which is the feasibility frontier
+
+    J*(b) = min { J(m) : CostModel.area(m) <= b, m in the span box }
+
+traced over a whole schedule of area budgets.  Running one cold
+constrained descent per budget answers it at n times the price; this
+module traces the entire frontier for little more than ONE constrained
+run by warm-started continuation:
+
+  * budgets are visited loosest -> tightest;
+  * the first (loosest) budget gets a full descent from the seeds;
+  * each tighter budget starts from the previous optimum, RE-PROJECTED
+    onto the smaller feasible set (the projection is the first thing the
+    shared descent loop applies), and only a short refinement descent
+    runs -- the optimum under budget ``b`` is almost always a short
+    projected step from the optimum under the next-looser budget;
+  * the active budget enters the jitted retraction as a TRACED scalar
+    (``backtracking_descent``'s ``retract_args``), so the whole sweep
+    shares one compiled objective/gradient/projection -- continuation
+    pays n small descents and ONE compile, where n cold runs would pay n
+    full descents.
+
+Monotonicity is enforced BY CONSTRUCTION, not hoped for: the feasible
+sets are nested (``b <= b'`` implies ``S(b) ⊆ S(b')``), so any machine
+found under a tighter budget is also feasible under every looser one --
+after the trace, solutions are propagated tightest -> loosest and a
+looser budget adopts a tighter budget's machine whenever it scored
+better.  The returned ``J*`` is therefore non-increasing in the budget
+across every FEASIBLE point, exactly like the true frontier.
+(Unattainable budgets -- below the span box's area floor -- are flagged
+``feasible=False`` and record the floor point as a best effort; a floor
+point violates its budget, so its J sits outside the frontier and is
+excluded from the monotonicity contract, pinned in
+tests/test_frontier.py.)
+
+The continuation-vs-cold-start price is measured by
+``python benchmarks/run.py frontier`` (artifact:
+benchmarks/out/frontier_codesign.md); ``docs/frontier.md`` is the worked
+guide and ``SweepResult.frontier`` bridges population sweeps into
+frontier traces via the ``seed_codesign`` warm starts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from repro.core import kernels_xp as K
+from repro.core.codesign import (
+    _as_batches,
+    _objective_terms,
+    backtracking_descent,
+    machine_arrays_from_theta,
+    params_of_theta,
+    resolve_beta,
+    theta_box,
+)
+from repro.core.constrained import (
+    FEASIBLE_RTOL,
+    budget_feasible,
+    project_to_budgets,
+    validate_area_envelope,
+)
+from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
+from repro.core.machine import MachineModel
+
+
+def _validate_budget_schedule(budgets) -> List[float]:
+    """Ascending, deduplicated, all-positive budget schedule as floats."""
+    try:
+        out = sorted({float(b) for b in budgets})
+    except TypeError as exc:
+        raise ValueError(
+            f"budgets must be an iterable of numbers, got {budgets!r}"
+        ) from exc
+    if not out:
+        raise ValueError("frontier_codesign needs at least one budget")
+    for b in out:
+        if not b > 0.0:
+            raise ValueError(f"budgets must be positive, got {b!r}")
+    return out
+
+
+@dataclasses.dataclass
+class FrontierResult:
+    """One traced feasibility frontier (all arrays indexed by budget,
+    ascending -- so ``objective`` is non-increasing left to right over
+    the ``feasible`` points; infeasible rows are best-effort floor
+    points).
+
+    ``per_seed_objective`` keeps the RAW per-(budget, seed) descent
+    outcomes before the monotone propagation, for diagnostics; the
+    ``objective``/``best_*`` fields are the frontier proper.
+
+    >>> import numpy as np
+    >>> r = FrontierResult(
+    ...     budgets=np.array([0.5, 1.0, 2.0]),
+    ...     objective=np.array([3.0, 1.2, 1.0]),
+    ...     best_names=["a", "a", "b"],
+    ...     best_params=[{"peak_flops": 1e14, "hbm_bw": 1e11, "ici_bw": 1e10,
+    ...                   "ici_links": 4.0, "inter_pod_bw": 1e10,
+    ...                   "scale_compute": 1.0, "scale_memory": 1.0,
+    ...                   "scale_interconnect": 1.0}] * 3,
+    ...     area=np.array([0.5, 1.0, 1.6]), power=np.array([0.6, 1.1, 1.7]),
+    ...     feasible=np.array([True, True, True]),
+    ...     per_seed_objective=np.array([[3.0], [1.2], [1.0]]),
+    ...     seed_names=["a"], steps=4, refine_steps=2, warm_start=True)
+    >>> len(r)
+    3
+    >>> float(r.knee())               # diminishing returns set in at 1.0
+    1.0
+    >>> r.best_at(1.5).name           # largest traced budget <= 1.5
+    'a+frontier@1'
+    >>> bool(np.all(np.diff(r.objective) <= 0))
+    True
+    """
+
+    budgets: np.ndarray              # (N,) ascending area budgets
+    objective: np.ndarray            # (N,) J*(budget); non-increasing
+                                     # across the feasible points
+    best_names: List[str]            # (N,) winning seed name per budget
+    best_params: List[Dict[str, float]]  # (N,) full machine params
+    area: np.ndarray                 # (N,) CostModel.area of the winner
+    power: np.ndarray                # (N,) CostModel.power of the winner
+    feasible: np.ndarray             # (N,) bool (False: budget unattainable)
+    per_seed_objective: np.ndarray   # (N, V) raw continuation outcomes
+    seed_names: List[str]
+    steps: int
+    refine_steps: int
+    warm_start: bool
+    power_budget: Optional[float] = None
+    area_envelope: Optional[Dict[str, float]] = None
+    suffix: str = "+frontier"
+
+    def __len__(self) -> int:
+        return len(self.budgets)
+
+    # --------------------------- extractions -------------------------- #
+
+    def best_model(self, i: int) -> MachineModel:
+        """The frontier machine at budget index ``i`` (name carries the
+        budget so sweeping several frontiers stays unambiguous)."""
+        p = self.best_params[i]
+        return MachineModel(
+            name=f"{self.best_names[i]}{self.suffix}"
+                 f"@{self.budgets[i]:g}",
+            peak_flops=p["peak_flops"],
+            hbm_bw=p["hbm_bw"],
+            ici_bw=p["ici_bw"],
+            ici_links=int(round(p["ici_links"])),
+            inter_pod_bw=p["inter_pod_bw"],
+            scale={"compute": p["scale_compute"],
+                   "memory": p["scale_memory"],
+                   "interconnect": p["scale_interconnect"]},
+        )
+
+    def best_at(self, budget: float) -> MachineModel:
+        """Best traced machine affordable within ``budget``: the frontier
+        point at the largest traced budget ``<= budget`` (feasible sets
+        are nested, so that machine fits under ``budget`` too).  Raises
+        when ``budget`` is below every traced point or only unattainable
+        points fit."""
+        idx = [i for i in range(len(self)) if
+               self.budgets[i] <= budget * (1.0 + FEASIBLE_RTOL)
+               and bool(self.feasible[i])]
+        if not idx:
+            raise ValueError(
+                f"no feasible frontier point within budget {budget!r}; "
+                f"traced budgets: {np.round(self.budgets, 4).tolist()}")
+        return self.best_model(idx[-1])
+
+    def knee(self) -> float:
+        """The budget where diminishing returns set in: the feasible point
+        farthest from the chord joining the tightest and loosest feasible
+        frontier points in the normalized (budget, J*) plane -- the classic
+        max-distance-to-chord knee.  A flat frontier's knee is its
+        tightest feasible budget (spending more buys nothing); fewer than
+        three feasible points degenerate the chord, returning the loosest.
+        """
+        idx = np.nonzero(self.feasible)[0]
+        if len(idx) == 0:
+            raise ValueError("no feasible frontier points")
+        b, j = self.budgets[idx], self.objective[idx]
+        if len(idx) < 3:
+            return float(b[-1])
+        bn = (b - b[0]) / ((b[-1] - b[0]) or 1.0)
+        jn = (j - j[-1]) / ((j[0] - j[-1]) or 1.0)
+        # Chord runs (0, 1) -> (1, 0); distance is |bn + jn - 1| / sqrt(2).
+        dist = np.abs(bn + jn - 1.0)
+        return float(b[int(np.argmax(dist))])
+
+    # ----------------------------- reports ---------------------------- #
+
+    def markdown(self) -> str:
+        knee = self.knee() if bool(np.any(self.feasible)) else None
+        lines = [
+            f"feasibility frontier: {len(self)} area budgets, "
+            f"{len(self.seed_names)} seeds, "
+            f"{'warm-started continuation' if self.warm_start else 'cold starts'} "
+            f"({self.steps} + {self.refine_steps}/budget steps)",
+            "",
+            "| area budget | J*(budget) | best seed | area | power "
+            "| feasible | knee |",
+            "|---" * 7 + "|",
+        ]
+        for i in range(len(self)):
+            lines.append(
+                f"| {self.budgets[i]:.4g} | {self.objective[i]:.4f} "
+                f"| {self.best_names[i]} | {self.area[i]:.3f} "
+                f"| {self.power[i]:.3f} "
+                f"| {'yes' if self.feasible[i] else 'NO'} "
+                f"| {'*' if knee is not None and self.budgets[i] == knee else ''} |")
+        if self.area_envelope:
+            lines += ["", f"per-subsystem envelopes: {self.area_envelope}"]
+        if self.power_budget is not None:
+            lines += ["", f"power budget (fixed): {self.power_budget}"]
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        out = {
+            "budgets": [float(b) for b in self.budgets],
+            "objective": [float(j) for j in self.objective],
+            "seed_names": list(self.seed_names),
+            "steps": self.steps,
+            "refine_steps": self.refine_steps,
+            "warm_start": self.warm_start,
+            "points": [
+                {"budget": float(self.budgets[i]),
+                 "objective": float(self.objective[i]),
+                 "best_seed": self.best_names[i],
+                 "area": float(self.area[i]),
+                 "power": float(self.power[i]),
+                 "feasible": bool(self.feasible[i]),
+                 "params": self.best_params[i]}
+                for i in range(len(self))],
+        }
+        if bool(np.any(self.feasible)):
+            out["knee"] = self.knee()
+        if self.power_budget is not None:
+            out["power_budget"] = self.power_budget
+        if self.area_envelope:
+            out["area_envelope"] = dict(self.area_envelope)
+        return out
+
+
+def frontier_codesign(
+    profiles,
+    machines,
+    budgets: Sequence[float],
+    *,
+    power_budget: Optional[float] = None,
+    area_envelope: Optional[Mapping[str, float]] = None,
+    steps: int = 100,
+    refine_steps: Optional[int] = None,
+    lr: float = 0.1,
+    span: float = 16.0,
+    beta=None,
+    beta_ref: int = 0,
+    timing_model: str = "serial",
+    eps: float = K.IDEAL_EPS,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    w_area: float = 0.1,
+    w_power: float = 0.05,
+    warm_start: bool = True,
+    projection: str = "shift",
+) -> FrontierResult:
+    """Trace J*(budget) over a schedule of area budgets by continuation.
+
+    ``budgets`` is any iterable of positive area budgets (deduplicated and
+    traced loosest -> tightest internally; the result is reported in
+    ascending budget order).  ``power_budget`` and ``area_envelope`` are
+    HELD FIXED across the sweep -- only the scalar area budget moves, so
+    the frontier isolates one axis exactly like the paper's
+    "how much fabric?" question.  ``steps`` is the full descent at the
+    loosest budget; each tighter budget re-projects the previous optimum
+    and refines for ``refine_steps`` (default ``max(steps // 5, 1)``).
+    ``warm_start=False`` runs every budget cold from the seeds (same code
+    path; used by the benchmark to price the continuation).  Descent is
+    projected-gradient (``projection`` picks the shift or Euclidean
+    retraction); every frontier point is feasible to ``FEASIBLE_RTOL``
+    whenever its budget is attainable inside the span box.
+
+    Example (two budgets, the named seeds; J* never worsens with budget):
+
+    >>> import numpy as np
+    >>> from repro.core import VARIANTS, WorkloadProfile, frontier_codesign
+    >>> from repro.core.sweep import MachineBatch
+    >>> apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+    ...                         collective_bytes={"all-reduce": 2e10},
+    ...                         num_devices=256, model_flops=5e16)]
+    >>> fr = frontier_codesign(apps, MachineBatch.from_models(VARIANTS),
+    ...                        budgets=[1.2, 0.6], steps=4, refine_steps=2)
+    >>> fr.budgets.tolist()
+    [0.6, 1.2]
+    >>> bool(np.all(np.diff(fr.objective) <= 1e-12))   # monotone J*
+    True
+    >>> bool(fr.feasible.all())
+    True
+    >>> bool((fr.area <= fr.budgets * (1 + 1e-9)).all())
+    True
+    """
+    asc = _validate_budget_schedule(budgets)
+    area_envelope = validate_area_envelope(area_envelope)
+    if power_budget is not None and not power_budget > 0.0:
+        raise ValueError(f"power_budget must be positive, got {power_budget!r}")
+    if refine_steps is None:
+        refine_steps = max(steps // 5, 1)
+    backend = K.get_backend("jax")
+    jax, jnp = backend._jax, backend._jnp
+
+    pb, mb = _as_batches(profiles, machines)
+    fixed_np = mb.arrays()
+    beta_np = resolve_beta(pb, mb, beta, beta_ref)
+    theta0, lo, hi = theta_box(mb, span)
+
+    with backend._x64():
+        p_arrays = backend.profile_arrays(pb.arrays())
+        fixed = backend.machine_arrays(fixed_np)
+        beta_j = backend.asarray(beta_np)
+        lo_j, hi_j = backend.asarray(lo), backend.asarray(hi)
+
+        def objective(theta):
+            m = machine_arrays_from_theta(jnp, theta, fixed)
+            return _objective_terms(jnp, p_arrays, m, beta_j, timing_model,
+                                    eps, cost_model, w_area, w_power)
+
+        def retract(theta, budget):
+            # ``budget`` is TRACED: one compiled projection serves every
+            # budget in the schedule (the continuation's compile economy).
+            out, _ = project_to_budgets(
+                jnp, theta, lo_j, hi_j, fixed, cost_model, budget,
+                power_budget, area_envelope=area_envelope, method=projection)
+            return out
+
+        cache: dict = {}
+        theta = backend.asarray(theta0)
+        lr_v = lr
+        raw: Dict[float, np.ndarray] = {}
+        raw_obj: Dict[float, np.ndarray] = {}
+        for j, b in enumerate(reversed(asc)):          # loosest -> tightest
+            n_steps = steps if (j == 0 or not warm_start) else refine_steps
+            start = theta if warm_start else backend.asarray(theta0)
+            start_lr = lr_v if warm_start else lr
+            theta_b, f_b, _, _, lr_out = backtracking_descent(
+                jax, jnp, start, objective, n_steps, start_lr,
+                retract=retract, retract_args=(backend.asarray(float(b)),),
+                cache=cache)
+            if warm_start:
+                theta, lr_v = theta_b, lr_out
+            raw[b] = backend.to_numpy(theta_b)
+            raw_obj[b] = np.asarray(f_b)
+
+    # Monotone propagation, tightest -> loosest: a tighter budget's winner
+    # is feasible at every looser budget, so carrying the incumbent up
+    # makes J* non-increasing in the budget BY CONSTRUCTION.
+    n = len(asc)
+    objective_arr = np.empty(n)
+    area_arr, power_arr = np.empty(n), np.empty(n)
+    feasible_arr = np.zeros(n, dtype=bool)
+    best_names: List[str] = [""] * n
+    best_params: List[Dict[str, float]] = [{}] * n
+    per_seed = np.stack([raw_obj[b] for b in asc], axis=0)
+    carry = None
+    for i, b in enumerate(asc):
+        th_i, f_i = raw[b], raw_obj[b]
+        m_i = machine_arrays_from_theta(np, th_i, fixed_np)
+        feas_i = budget_feasible(np, m_i, cost_model, b, power_budget,
+                                 area_envelope=area_envelope)
+        k = int(np.argmin(np.where(feas_i, f_i, np.inf))
+                if bool(feas_i.any()) else np.argmin(f_i))
+        cand = {
+            "obj": float(f_i[k]),
+            "params": params_of_theta(th_i[k], fixed_np, k),
+            "name": mb.names[k],
+            "feasible": bool(feas_i[k]),
+            "area": float(np.asarray(cost_model.area(m_i))[k]),
+            "power": float(np.asarray(cost_model.power(m_i))[k]),
+        }
+        if carry is not None and (not cand["feasible"]
+                                  or carry["obj"] < cand["obj"]):
+            cand = carry
+        if cand["feasible"]:
+            carry = cand
+        objective_arr[i] = cand["obj"]
+        best_names[i] = cand["name"]
+        best_params[i] = cand["params"]
+        feasible_arr[i] = cand["feasible"]
+        area_arr[i] = cand["area"]
+        power_arr[i] = cand["power"]
+
+    return FrontierResult(
+        budgets=np.asarray(asc),
+        objective=objective_arr,
+        best_names=best_names,
+        best_params=best_params,
+        area=area_arr,
+        power=power_arr,
+        feasible=feasible_arr,
+        per_seed_objective=per_seed,
+        seed_names=list(mb.names),
+        steps=steps,
+        refine_steps=refine_steps,
+        warm_start=warm_start,
+        power_budget=power_budget,
+        area_envelope=area_envelope,
+    )

@@ -40,6 +40,14 @@ Co-design modes (after the kernel substitution):
                  lets the descent pick per machine variant.  The kernel
                  substitution applies to the primary --variant cell only;
                  the other shardings enter as baseline compiles.
+  --budget-sweep LO:HI:N
+                 trace the feasibility frontier J*(budget) over N area
+                 budgets from LO to HI by warm-started continuation
+                 (repro.core.frontier) instead of a single budgeted run.
+  --area-envelope K=V[,K=V...]
+                 per-subsystem area envelopes (e.g. peak_flops=1.5,
+                 hbm_bw=0.8) added as one constraint per entry to --grad
+                 descent or to every --budget-sweep point.
 """
 
 import argparse
@@ -172,12 +180,13 @@ def codesign_sweep(profile, n: int, seed: int = 0,
 def codesign_grad(profile, steps: int, lr: float = 0.1,
                   area_budget: float = None, power_budget: float = None,
                   constraint_mode: str = "projected",
-                  opt_links: bool = False) -> dict:
+                  opt_links: bool = False, area_envelope: dict = None) -> dict:
     """Gradient co-design: descend the scalarized (congruence, area, power)
     objective from the named-variant seeds by jax.grad through the shared
     kernels (``repro.core.codesign``); the optimized continuous designs
     answer "where should the machine move?" rather than "which sampled
-    point wins?".  With a budget the descent is constrained
+    point wins?".  With a budget (scalar area/power and/or a
+    per-subsystem envelope) the descent is constrained
     (``repro.core.constrained``): projected-gradient or augmented-
     Lagrangian, optionally relaxing ici_links with rounding-and-repair."""
     from repro.core.codesign import grad_codesign
@@ -185,14 +194,29 @@ def codesign_grad(profile, steps: int, lr: float = 0.1,
     from repro.core.sweep import MachineBatch
 
     seeds = MachineBatch.from_models(M.VARIANTS)
-    if area_budget is None and power_budget is None:
+    if area_budget is None and power_budget is None and not area_envelope:
         res = grad_codesign([profile], seeds, steps=steps, lr=lr)
     else:
         res = constrained_codesign(
             [profile], seeds, steps=steps, lr=lr, area_budget=area_budget,
-            power_budget=power_budget, mode=constraint_mode,
-            optimize_links=opt_links)
+            power_budget=power_budget, area_envelope=area_envelope,
+            mode=constraint_mode, optimize_links=opt_links)
     return res.to_json()
+
+
+def codesign_frontier(profile, budgets, steps: int, lr: float = 0.1,
+                      power_budget: float = None,
+                      area_envelope: dict = None):
+    """Feasibility frontier J*(budget) from the named-variant seeds
+    (``repro.core.frontier``): one warm-started continuation over the
+    budget schedule instead of one cold constrained run per budget."""
+    from repro.core.frontier import frontier_codesign
+    from repro.core.sweep import MachineBatch
+
+    return frontier_codesign(
+        [profile], MachineBatch.from_models(M.VARIANTS), budgets,
+        steps=steps, lr=lr, power_budget=power_budget,
+        area_envelope=area_envelope)
 
 
 def codesign_joint(profile_group, steps: int, lr: float = 0.1,
@@ -223,6 +247,50 @@ def attention_layers(cfg) -> int:
     return cfg.n_layers
 
 
+def parse_budget_sweep(parser, spec):
+    """``LO:HI:N`` -> N evenly spaced area budgets, validated at parse
+    time (like ``--backend``) so a bogus schedule fails before any
+    compile work."""
+    if spec is None:
+        return None
+    parts = spec.split(":")
+    if len(parts) != 3:
+        parser.error(f"--budget-sweep expects LO:HI:N, got {spec!r}")
+    try:
+        lo, hi, n = float(parts[0]), float(parts[1]), int(parts[2])
+    except ValueError:
+        parser.error(f"--budget-sweep expects numeric LO:HI:N, got {spec!r}")
+    if not 0.0 < lo < hi:
+        parser.error(f"--budget-sweep needs 0 < LO < HI, got {spec!r}")
+    if n < 2:
+        parser.error(f"--budget-sweep needs N >= 2 budgets, got {n}")
+    return [float(b) for b in np.linspace(lo, hi, n)]
+
+
+def parse_area_envelope(parser, spec):
+    """``K=V[,K=V...]`` -> validated envelope dict (keys checked against
+    the cost model's rate fields at parse time)."""
+    if spec is None:
+        return None
+    from repro.core.constrained import validate_area_envelope
+
+    env = {}
+    for item in spec.split(","):
+        key, sep, value = item.partition("=")
+        if not sep:
+            parser.error(f"--area-envelope expects K=V[,K=V...], "
+                         f"got {item!r}")
+        try:
+            env[key.strip()] = float(value)
+        except ValueError:
+            parser.error(f"--area-envelope value for {key.strip()!r} must "
+                         f"be a number, got {value!r}")
+    try:
+        return validate_area_envelope(env)
+    except ValueError as exc:
+        parser.error(str(exc))
+
+
 def validate_codesign_args(parser, args) -> None:
     """Reject inconsistent co-design flags at parse time (like --backend):
     budgets must be positive, and every constrained/joint flag needs the
@@ -231,17 +299,34 @@ def validate_codesign_args(parser, args) -> None:
                         ("--power-budget", args.power_budget)):
         if value is not None and not value > 0.0:
             parser.error(f"{name} must be positive, got {value}")
-    has_budget = args.area_budget is not None or args.power_budget is not None
+    budget_sweep = getattr(args, "budget_sweep", None)
+    envelope = getattr(args, "area_envelope", None)
+    has_budget = (args.area_budget is not None
+                  or args.power_budget is not None or envelope is not None)
     if (has_budget or args.joint or args.opt_links
-            or args.constraint_mode) and not args.grad:
-        parser.error("--area-budget/--power-budget/--constraint-mode/"
-                     "--opt-links/--joint require --grad STEPS")
-    if (args.constraint_mode or args.opt_links) and not has_budget:
+            or args.constraint_mode or budget_sweep is not None) \
+            and not args.grad:
+        parser.error("--area-budget/--power-budget/--area-envelope/"
+                     "--constraint-mode/--opt-links/--joint/--budget-sweep "
+                     "require --grad STEPS")
+    if (args.constraint_mode or args.opt_links) \
+            and not has_budget and budget_sweep is None:
         parser.error("--constraint-mode/--opt-links require "
                      "--area-budget and/or --power-budget")
     if args.joint and (args.constraint_mode or args.opt_links):
         parser.error("--joint supports budgets only through the projected "
                      "retraction; drop --constraint-mode/--opt-links")
+    if budget_sweep is not None:
+        if args.area_budget is not None:
+            parser.error("--budget-sweep IS the area-budget axis; "
+                         "drop --area-budget")
+        if args.joint or args.opt_links or args.constraint_mode:
+            parser.error("--budget-sweep traces the frontier by projected "
+                         "continuation; drop --joint/--opt-links/"
+                         "--constraint-mode")
+    if args.joint and envelope is not None:
+        parser.error("--joint does not support --area-envelope; use scalar "
+                     "--area-budget/--power-budget")
 
 
 def main(argv=None) -> int:
@@ -289,11 +374,22 @@ def main(argv=None) -> int:
                     help="joint (machine, sharding-variant) descent: "
                          "compile every sharding variant and let --grad "
                          "choose per machine variant")
+    ap.add_argument("--budget-sweep", default=None, metavar="LO:HI:N",
+                    help="trace the feasibility frontier J*(budget) over N "
+                         "area budgets from LO to HI (warm-started "
+                         "continuation; requires --grad, replaces "
+                         "--area-budget)")
+    ap.add_argument("--area-envelope", default=None, metavar="K=V[,K=V...]",
+                    help="per-subsystem area envelopes for --grad / "
+                         "--budget-sweep, e.g. peak_flops=1.5,hbm_bw=0.8 "
+                         "(keys from repro.core.costmodel.RATE_FIELDS)")
     args = ap.parse_args(argv)
     # Fail at parse time with the registry's current contents, not deep
     # inside get_backend() after minutes of compile work.
     from repro.core.kernels_xp import validate_backend_arg
     validate_backend_arg(ap, args.backend)
+    budgets = parse_budget_sweep(ap, args.budget_sweep)
+    envelope = parse_area_envelope(ap, args.area_envelope)
     validate_codesign_args(ap, args)
 
     cfg = C.get_config(args.arch, smoke=args.smoke)
@@ -379,6 +475,21 @@ def main(argv=None) -> int:
             print(f"joint codesign over {len(group)} shardings: "
                   f"best={gd['best_variant']} picks="
                   f"{gd['selection'][gd['best_variant']]}")
+        elif budgets is not None:
+            # Feasibility frontier: how much fabric does this workload
+            # actually need?  One continuation over the budget schedule.
+            fr = codesign_frontier(profile, budgets, args.grad,
+                                   lr=args.grad_lr,
+                                   power_budget=args.power_budget,
+                                   area_envelope=envelope)
+            profile.meta["frontier_codesign"] = fr.to_json()
+            n_feas = int(fr.feasible.sum())
+            knee = f"{fr.knee():.4g}" if n_feas else "n/a"
+            print(f"frontier over {len(fr)} budgets "
+                  f"[{fr.budgets[0]:.4g}, {fr.budgets[-1]:.4g}]: "
+                  f"J* {fr.objective[-1]:.4f} (loosest) .. "
+                  f"{fr.objective[0]:.4f} (tightest), "
+                  f"feasible {n_feas}/{len(fr)}, knee={knee}")
         else:
             # Continuous co-design: in which direction should the machine
             # move (optionally under an area/power budget)?
@@ -387,7 +498,7 @@ def main(argv=None) -> int:
                 area_budget=args.area_budget,
                 power_budget=args.power_budget,
                 constraint_mode=args.constraint_mode or "projected",
-                opt_links=args.opt_links)
+                opt_links=args.opt_links, area_envelope=envelope)
             profile.meta["grad_codesign"] = gd
             lines = ", ".join(
                 f"{v['name']}: {v['objective_seed']:.4f}->"

@@ -58,9 +58,11 @@ from repro.core.codesign import theta_box
 from repro.core.constrained import (
     FEASIBLE_RTOL,
     budget_feasible,
+    budget_violations_vector,
     constrained_codesign,
     joint_codesign,
     project_to_budgets,
+    validate_area_envelope,
 )
 from repro.core.costmodel import DEFAULT_COST_MODEL, CostModel
 from repro.core.sweep import MachineBatch, run_sweep, shard_sweep
@@ -142,26 +144,203 @@ def test_projection_leaves_feasible_points_untouched():
 # --------------------------------------------------------------------------- #
 
 
-def _P(theta, budget=1.0):
+def _P(theta, budget=1.0, method="shift"):
     return project_to_budgets(
-        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, budget)[0]
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, budget,
+        method=method)[0]
 
 
+@pytest.mark.parametrize("method", ["shift", "euclidean"])
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
 @pytest.mark.parametrize("budget", [0.5, 1.0, 2.0])
-def test_clip_and_projection_commute(seed, budget):
+def test_clip_and_projection_commute(seed, budget, method):
     """The combined retraction absorbs the span clip on either side:
     P(clip(x)) == P(x) == clip(P(x)).  Descent code may therefore order
     the two operators freely -- the bug class this pins is a projection
     that lands outside the box (clip-after breaks the budget) or a clip
-    that re-inflates a projected design (budget-after breaks the box)."""
+    that re-inflates a projected design (budget-after breaks the box).
+    Both retraction operators (uniform shift, true Euclidean) obey the
+    same laws, so they are interchangeable in every descent mode."""
     rng = np.random.default_rng(seed)
     theta = _rng_theta(rng, scale=6.0)   # far outside the box on purpose
-    p = _P(theta, budget)
-    np.testing.assert_array_equal(p, _P(np.clip(theta, LO, HI), budget))
+    p = _P(theta, budget, method)
+    np.testing.assert_array_equal(
+        p, _P(np.clip(theta, LO, HI), budget, method))
     np.testing.assert_array_equal(p, np.clip(p, LO, HI))
     # Idempotence: projecting a projected point is the identity.
-    np.testing.assert_array_equal(p, _P(p, budget))
+    np.testing.assert_allclose(p, _P(p, budget, method), atol=1e-12)
+
+
+# --------------------------------------------------------------------------- #
+# The Euclidean projection (per-coordinate KKT solve)
+# --------------------------------------------------------------------------- #
+
+
+@settings(max_examples=64, deadline=None)
+@given(budget=st.floats(0.05, 4.0), jitter=st.floats(0.0, 6.0))
+def test_euclidean_projection_feasible_for_random_budgets(budget, jitter):
+    """Same contract as the shift operator: for ANY budget and any (even
+    out-of-box) theta, the Euclidean-projected machine satisfies
+    area <= budget * (1 + 1e-9) whenever the budget is attainable."""
+    rng = np.random.default_rng(int(jitter * 1e6) % (2 ** 31))
+    theta = THETA0 + rng.uniform(-jitter, jitter, size=THETA0.shape)
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, budget,
+        method="euclidean")
+    area = DEFAULT_COST_MODEL.area(_machines_of(proj))
+    floor_area = DEFAULT_COST_MODEL.area(_machines_of(LO))
+    attainable = floor_area <= budget
+    assert np.array_equal(feasible, attainable)
+    assert np.all(area[attainable] <= budget * (1.0 + FEASIBLE_RTOL))
+    assert np.all(proj >= LO - 1e-12) and np.all(proj <= HI + 1e-12)
+
+
+@pytest.mark.parametrize("budget", [0.3, 0.8, 1.5])
+def test_euclidean_moves_no_farther_than_shift(budget):
+    """The point of the true projection: it returns the CLOSEST feasible
+    point, so its L2 move from the (clipped) input never exceeds the
+    uniform shift's -- a binding budget on one subsystem no longer drags
+    every other rate down with it."""
+    rng = np.random.default_rng(17)
+    theta = _rng_theta(rng, scale=4.0)
+    clipped = np.clip(theta, LO, HI)
+    d_euc = np.linalg.norm(_P(theta, budget, "euclidean") - clipped, axis=1)
+    d_shift = np.linalg.norm(_P(theta, budget, "shift") - clipped, axis=1)
+    assert np.all(d_euc <= d_shift + 1e-9)
+
+
+def test_euclidean_projection_respects_both_budgets():
+    rng = np.random.default_rng(7)
+    theta = _rng_theta(rng)
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, 0.8,
+        power_budget=1.0, method="euclidean")
+    m = _machines_of(proj)
+    ok = budget_feasible(np, m, DEFAULT_COST_MODEL, 0.8, 1.0)
+    assert np.all(ok[feasible])
+
+
+def test_euclidean_rejects_links_column_and_mask():
+    """The Euclidean path owns only the 4 rate columns; the links
+    relaxation and the masked rounding repair stay on the shift
+    operator (an explicit error, not silent wrong math)."""
+    theta5 = np.concatenate([THETA0, np.log(FIXED.ici_links)[:, None]],
+                            axis=1)
+    lo5 = np.concatenate([LO, np.zeros((len(LO), 1))], axis=1)
+    hi5 = np.concatenate([HI, np.log(FIXED.ici_links)[:, None] + 1], axis=1)
+    with pytest.raises(ValueError, match="4 rate columns"):
+        project_to_budgets(np, theta5, lo5, hi5, FIXED, DEFAULT_COST_MODEL,
+                           1.0, method="euclidean")
+    with pytest.raises(ValueError, match="4 rate columns"):
+        project_to_budgets(np, THETA0, LO, HI, FIXED, DEFAULT_COST_MODEL,
+                           1.0, mask=np.array([True] * 4),
+                           method="euclidean")
+    with pytest.raises(ValueError, match="unknown projection"):
+        project_to_budgets(np, THETA0, LO, HI, FIXED, DEFAULT_COST_MODEL,
+                           1.0, method="manhattan")
+
+
+def test_euclidean_constrained_codesign_end_to_end():
+    apps = random_profiles(3, seed=41)
+    res = constrained_codesign(apps, SEEDS, area_budget=0.8, steps=10,
+                               projection="euclidean")
+    assert np.all(res.area_final <= 0.8 * (1.0 + FEASIBLE_RTOL))
+    assert np.all(res.feasible)
+    assert np.all(res.violation_trace == 0.0)
+    with pytest.raises(ValueError, match="optimize_links"):
+        constrained_codesign(apps, SEEDS, area_budget=0.8, steps=2,
+                             projection="euclidean", optimize_links=True)
+    with pytest.raises(ValueError, match="unknown projection"):
+        constrained_codesign(apps, SEEDS, area_budget=0.8, steps=2,
+                             projection="taxicab")
+
+
+# --------------------------------------------------------------------------- #
+# Per-subsystem area envelopes (multi-constraint budgets)
+# --------------------------------------------------------------------------- #
+
+
+def test_validate_area_envelope():
+    assert validate_area_envelope(None) is None
+    assert validate_area_envelope({}) is None
+    assert validate_area_envelope({"hbm_bw": 1.5}) == {"hbm_bw": 1.5}
+    with pytest.raises(ValueError, match="unknown area_envelope field"):
+        validate_area_envelope({"sram": 1.0})
+    with pytest.raises(ValueError, match="must be positive"):
+        validate_area_envelope({"hbm_bw": 0.0})
+
+
+def test_violations_vector_one_column_per_constraint():
+    m = _machines_of(THETA0 + np.log(4.0))   # 4x the seeds: everything over
+    vv = budget_violations_vector(np, m, DEFAULT_COST_MODEL, 1.0, 1.0,
+                                  {"hbm_bw": 0.5, "peak_flops": 0.5})
+    assert vv.shape == (len(SEEDS), 4)       # area, power, 2 envelope keys
+    assert np.all(vv >= 0.0) and np.all(vv[:, 0] > 0.0)
+    only_env = budget_violations_vector(np, m, DEFAULT_COST_MODEL, None,
+                                        None, {"hbm_bw": 0.5})
+    assert only_env.shape == (len(SEEDS), 1)
+
+
+@pytest.mark.parametrize("method", ["shift", "euclidean"])
+def test_envelope_projection_caps_each_subsystem(method):
+    rng = np.random.default_rng(5)
+    theta = _rng_theta(rng, scale=4.0)
+    env = {"peak_flops": 0.7, "hbm_bw": 1.2}
+    proj, feasible = project_to_budgets(
+        np, theta, LO, HI, FIXED, DEFAULT_COST_MODEL, None,
+        area_envelope=env, method=method)
+    m = _machines_of(proj)
+    for field, b in env.items():
+        sub = DEFAULT_COST_MODEL.subsystem_area(m, field)
+        assert np.all(sub[feasible] <= b * (1.0 + FEASIBLE_RTOL)), field
+
+
+@pytest.mark.parametrize("mode", ["projected", "lagrangian"])
+def test_envelope_constrained_codesign_end_to_end(mode):
+    """Envelopes are honoured by both descent modes, composed with the
+    scalar area budget; the Lagrangian carries one multiplier per
+    constraint and its damped-trace law still holds."""
+    apps = random_profiles(3, seed=43)
+    env = {"hbm_bw": 0.6}
+    res = constrained_codesign(apps, SEEDS, area_budget=0.9,
+                               area_envelope=env, mode=mode, steps=12,
+                               outer_iters=3)
+    assert np.all(res.feasible)
+    assert np.all(res.area_final <= 0.9 * (1.0 + FEASIBLE_RTOL))
+    for m in res.models():
+        assert (DEFAULT_COST_MODEL.subsystem_area(m, "hbm_bw")
+                <= 0.6 * (1.0 + FEASIBLE_RTOL))
+    assert np.all(np.diff(res.violation_trace, axis=0) <= 1e-12)
+    rep = res.feasibility_report()
+    assert rep["constrained"] and rep["area_envelope"] == env
+
+
+def test_envelope_with_links_relaxation_keeps_integer_links():
+    """The ici_bw_total envelope is re-checked against the ROUNDED link
+    count during the repair, so returned models satisfy it with integer
+    links."""
+    apps = random_profiles(2, seed=47)
+    res = constrained_codesign(apps, SEEDS, area_budget=1.0,
+                               area_envelope={"ici_bw_total": 0.7},
+                               steps=10, optimize_links=True)
+    for m in res.models():
+        assert m.ici_links >= 1 and isinstance(m.ici_links, int)
+        assert (DEFAULT_COST_MODEL.subsystem_area(m, "ici_bw_total")
+                <= 0.7 * (1.0 + FEASIBLE_RTOL))
+    assert np.all(res.feasible)
+
+
+def test_envelope_only_constraint_set_is_valid():
+    """An envelope alone is a legitimate constraint set (no scalar budget
+    required) -- and an empty constraint set still raises."""
+    apps = random_profiles(2, seed=53)
+    res = constrained_codesign(apps, SEEDS,
+                               area_envelope={"peak_flops": 0.8}, steps=6)
+    for m in res.models():
+        assert (DEFAULT_COST_MODEL.subsystem_area(m, "peak_flops")
+                <= 0.8 * (1.0 + FEASIBLE_RTOL))
+    with pytest.raises(ValueError, match="area_envelope"):
+        constrained_codesign(apps, SEEDS, steps=2)
 
 
 # --------------------------------------------------------------------------- #
@@ -221,7 +400,8 @@ def test_constrained_with_power_budget(suite):
 
 
 def test_constrained_validates_inputs(suite):
-    with pytest.raises(ValueError, match="area_budget and/or power_budget"):
+    with pytest.raises(ValueError,
+                       match="area_budget, power_budget and/or area_envelope"):
         constrained_codesign(suite, SEEDS, steps=2)
     with pytest.raises(ValueError, match="must be positive"):
         constrained_codesign(suite, SEEDS, area_budget=-1.0, steps=2)
