@@ -18,6 +18,10 @@ Public API:
   constrained.joint_codesign               -- joint machine+sharding descent
   frontier.frontier_codesign               -- J*(budget) feasibility frontier
                                               by warm-started continuation
+  spec.CodesignSpec                        -- one validated request object
+                                              accepted by every co-design
+                                              entry point and the serving
+                                              front door
 
 See docs/architecture.md for the layer map and docs/backends.md for the
 backend-authoring contract.
@@ -52,7 +56,9 @@ from repro.core.kernels_xp import (
     available_backends,
     get_backend,
     register_backend,
+    validate_backend_name,
 )
+from repro.core.spec import CodesignSpec, resolve_spec
 from repro.core.machine import (
     ALL_SUBSYSTEMS,
     IDEAL_EPS,

@@ -297,7 +297,21 @@ class CodesignResult:
             rep["final_violation"] = float(np.max(self.violation_trace[-1]))
         return rep
 
-    def to_json(self) -> dict:
+    def _variant_order(self, top_k: Optional[int]) -> List[int]:
+        """Variant indices to report: all, or the ``top_k`` best by final
+        objective (feasible variants first, matching ``best``'s tie-break;
+        original seed order preserved within the kept set)."""
+        if top_k is None:
+            return list(range(len(self.names)))
+        obj = np.asarray(self.objective_final, dtype=float)
+        if self.feasible is not None:
+            obj = np.where(np.asarray(self.feasible, bool), obj, np.inf)
+        keep = sorted(range(len(self.names)),
+                      key=lambda i: (float(obj[i]), i))[:top_k]
+        return sorted(keep)
+
+    def to_json(self, top_k: Optional[int] = None) -> dict:
+        order = self._variant_order(top_k)
         blob = {
             "steps": self.steps,
             "mode": self.mode,
@@ -305,23 +319,49 @@ class CodesignResult:
             "w_power": self.w_power,
             "best_variant": f"{self.names[self.best]}{self.suffix}",
             "variants": [
-                {"name": f"{n}{self.suffix}",
-                 "objective_seed": float(js),
-                 "objective_final": float(jf),
-                 "seed_params": sp,
-                 "final_params": fp}
-                for n, js, jf, sp, fp in zip(
-                    self.names, self.objective_seed, self.objective_final,
-                    self.seed_params, self.final_params)],
+                {"name": f"{self.names[i]}{self.suffix}",
+                 "objective_seed": float(self.objective_seed[i]),
+                 "objective_final": float(self.objective_final[i]),
+                 "seed_params": self.seed_params[i],
+                 "final_params": self.final_params[i]}
+                for i in order],
         }
         if (self.area_budget is not None or self.power_budget is not None
                 or self.area_envelope):
             blob["feasibility"] = self.feasibility_report()
         if self.selection_names is not None:
             blob["selection"] = {
-                f"{n}{self.suffix}": sel
-                for n, sel in zip(self.names, self.selection_names)}
+                f"{self.names[i]}{self.suffix}": self.selection_names[i]
+                for i in order}
         return blob
+
+    def markdown(self, top_k: Optional[int] = None) -> str:
+        """GitHub-flavoured summary table (the uniform result protocol:
+        every sweep/co-design result renders via ``markdown``/``to_json``
+        so the serving front door needs exactly one renderer)."""
+        order = self._variant_order(top_k)
+        has_budget = self.feasible is not None
+        head = "| variant | J seed | J final | improvement |"
+        rule = "|---|---|---|---|"
+        if has_budget:
+            head += " area | power | feasible |"
+            rule += "---|---|---|"
+        lines = [head, rule]
+        for i in order:
+            star = " *" if i == self.best else ""
+            row = (f"| {self.names[i]}{self.suffix}{star} "
+                   f"| {float(self.objective_seed[i]):.4f} "
+                   f"| {float(self.objective_final[i]):.4f} "
+                   f"| {float(self.improvement[i]):+.4f} |")
+            if has_budget:
+                row += (f" {float(self.area_final[i]):.3f} "
+                        f"| {float(self.power_final[i]):.3f} "
+                        f"| {'yes' if bool(self.feasible[i]) else 'NO'} |")
+            lines.append(row)
+        lines.append("")
+        lines.append(f"mode: {self.mode}; steps: {self.steps}; "
+                     f"best: {self.names[self.best]}{self.suffix}")
+        return "\n".join(lines)
 
 
 def params_of_theta(theta_row: np.ndarray, fixed_np: K.MachineArrays,

@@ -568,6 +568,17 @@ def _round_links_with_repair(theta_np, lo, hi, fixed_np, cost_model,
     return best_theta, best_feas, best_obj
 
 
+#: Historical defaults, now resolved through ``repro.core.spec.resolve_spec``
+#: so legacy keyword-only calls stay byte-identical while ``spec=`` requests
+#: fill unset parameters (explicit kwarg > spec field > this table).
+_CONSTRAINED_DEFAULTS = dict(
+    area_budget=None, power_budget=None, area_envelope=None,
+    mode="projected", projection="shift", steps=100, lr=0.1, span=16.0,
+    beta=None, timing_model="serial", cost_model=DEFAULT_COST_MODEL,
+    w_area=0.1, w_power=0.05, optimize_links=False,
+)
+
+
 def constrained_codesign(
     profiles,
     machines,
@@ -575,22 +586,23 @@ def constrained_codesign(
     area_budget: Optional[float] = None,
     power_budget: Optional[float] = None,
     area_envelope: Optional[Mapping[str, float]] = None,
-    mode: str = "projected",
-    projection: str = "shift",
-    steps: int = 100,
-    lr: float = 0.1,
-    span: float = 16.0,
+    mode: Optional[str] = None,
+    projection: Optional[str] = None,
+    steps: Optional[int] = None,
+    lr: Optional[float] = None,
+    span: Optional[float] = None,
     beta=None,
     beta_ref: int = 0,
-    timing_model: str = "serial",
+    timing_model: Optional[str] = None,
     eps: float = K.IDEAL_EPS,
-    cost_model: CostModel = DEFAULT_COST_MODEL,
-    w_area: float = 0.1,
-    w_power: float = 0.05,
-    optimize_links: bool = False,
+    cost_model: Optional[CostModel] = None,
+    w_area: Optional[float] = None,
+    w_power: Optional[float] = None,
+    optimize_links: Optional[bool] = None,
     outer_iters: int = 6,
     mu0: float = 10.0,
     mu_growth: float = 4.0,
+    spec=None,
 ) -> CodesignResult:
     """Budgeted ``grad_codesign``: descend J subject to silicon budgets.
 
@@ -611,6 +623,11 @@ def constrained_codesign(
     relaxes ``ici_links`` continuously and finishes with
     rounding-with-repair (shift projection only -- the Euclidean path has
     no links column).
+
+    A ``spec=CodesignSpec(...)`` request fills any parameter left unset;
+    an explicitly-passed keyword always wins over the spec's field, and
+    keyword-only legacy calls are byte-identical to pre-spec behaviour
+    (pinned in tests/test_constrained.py).
 
     Example (tight budget: the optimum must stay at reference-chip area):
 
@@ -642,6 +659,22 @@ def constrained_codesign(
     >>> env.feasibility_report()["area_envelope"]
     {'hbm_bw': 0.8}
     """
+    from repro.core.spec import resolve_spec
+
+    r = resolve_spec(spec, _CONSTRAINED_DEFAULTS, dict(
+        area_budget=area_budget, power_budget=power_budget,
+        area_envelope=area_envelope, mode=mode, projection=projection,
+        steps=steps, lr=lr, span=span, beta=beta, timing_model=timing_model,
+        cost_model=cost_model, w_area=w_area, w_power=w_power,
+        optimize_links=optimize_links))
+    area_budget, power_budget = r["area_budget"], r["power_budget"]
+    area_envelope, mode, projection = (r["area_envelope"], r["mode"],
+                                       r["projection"])
+    steps, lr, span, beta = r["steps"], r["lr"], r["span"], r["beta"]
+    timing_model, cost_model = r["timing_model"], r["cost_model"]
+    w_area, w_power = r["w_area"], r["w_power"]
+    optimize_links = r["optimize_links"]
+
     area_envelope = _validate_budgets(area_budget, power_budget,
                                       area_envelope)
     if mode not in ("projected", "lagrangian"):
@@ -823,26 +856,34 @@ def _hard_weights(agg: np.ndarray, gids: np.ndarray) -> np.ndarray:
     return w
 
 
+_JOINT_DEFAULTS = dict(
+    mode="alternate", steps=80, lr=0.1, span=16.0, beta=None,
+    timing_model="serial", cost_model=DEFAULT_COST_MODEL,
+    w_area=0.1, w_power=0.05, area_budget=None, power_budget=None,
+)
+
+
 def joint_codesign(
     profile_groups,
     machines,
     *,
-    mode: str = "alternate",
+    mode: Optional[str] = None,
     rounds: int = 4,
-    steps: int = 80,
-    lr: float = 0.1,
-    span: float = 16.0,
+    steps: Optional[int] = None,
+    lr: Optional[float] = None,
+    span: Optional[float] = None,
     beta=None,
     beta_ref: int = 0,
-    timing_model: str = "serial",
+    timing_model: Optional[str] = None,
     eps: float = K.IDEAL_EPS,
-    cost_model: CostModel = DEFAULT_COST_MODEL,
-    w_area: float = 0.1,
-    w_power: float = 0.05,
+    cost_model: Optional[CostModel] = None,
+    w_area: Optional[float] = None,
+    w_power: Optional[float] = None,
     area_budget: Optional[float] = None,
     power_budget: Optional[float] = None,
     temp0: float = 1.0,
     temp_min: float = 0.05,
+    spec=None,
 ) -> CodesignResult:
     """Joint (machine, sharding-variant) descent through the same kernels.
 
@@ -887,6 +928,18 @@ def joint_codesign(
     >>> bool((cd.improvement >= 0).all())
     True
     """
+    from repro.core.spec import resolve_spec
+
+    r = resolve_spec(spec, _JOINT_DEFAULTS, dict(
+        mode=mode, steps=steps, lr=lr, span=span, beta=beta,
+        timing_model=timing_model, cost_model=cost_model, w_area=w_area,
+        w_power=w_power, area_budget=area_budget, power_budget=power_budget))
+    mode, steps, lr, span, beta = (r["mode"], r["steps"], r["lr"], r["span"],
+                                   r["beta"])
+    timing_model, cost_model = r["timing_model"], r["cost_model"]
+    w_area, w_power = r["w_area"], r["w_power"]
+    area_budget, power_budget = r["area_budget"], r["power_budget"]
+
     if mode not in ("alternate", "softmax"):
         raise ValueError(f"unknown joint mode {mode!r}; "
                          "have ('alternate', 'softmax')")

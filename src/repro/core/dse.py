@@ -46,14 +46,49 @@ class DseCell:
         return self.report.aggregate
 
 
-def _table_markdown(table) -> str:
+def _top_variants(table, top_k: Optional[int]) -> List[str]:
+    """Variant columns to report: all, or the best ``top_k`` by suite mean."""
+    variants = table.variants
+    if top_k is None:
+        return variants
+    return sorted(variants, key=table.aggregate_mean)[:top_k]
+
+
+def _table_json(table, top_k: Optional[int]) -> dict:
+    """JSON rendering shared by the eager and lazy tables (uniform result
+    protocol: every result type exposes ``to_json(top_k=...)``)."""
+    variants = _top_variants(table, top_k)
+    scores = {}
+    for app in table.apps:
+        scores[app] = {}
+        for v in variants:
+            trip = table._triplet(app, v)
+            if trip is not None:
+                scores[app][v] = {"ICS": trip[0], "HRCS": trip[1],
+                                  "LBCS": trip[2]}
+    return {
+        "apps": table.apps,
+        "variants": variants,
+        "suites": {s: list(apps) for s, apps in table.suites.items()},
+        "aggregate": {app: {v: table._aggregate(app, v) for v in variants}
+                      for app in table.apps},
+        "scores": scores,
+        "best_fit": {app: table.best_fit(app) for app in table.apps},
+        "suite_mean": {s: {v: table.suite_mean(s, v) for v in variants}
+                       for s in table.suites},
+        "aggregate_mean": {v: table.aggregate_mean(v) for v in variants},
+        "overall_best_fit": table.overall_best_fit(),
+    }
+
+
+def _table_markdown(table, variants=None) -> str:
     """Table I rendering shared by the eager and lazy tables.
 
     ``table`` provides ``variants``, ``suites``, ``best_fit``,
     ``suite_mean``, ``suite_best_fit``, ``aggregate_mean``,
     ``overall_best_fit`` and ``_aggregate(app, variant) -> Optional[float]``.
     """
-    variants = table.variants
+    variants = table.variants if variants is None else variants
     lines = ["| application | " + " | ".join(variants) + " | best fit |",
              "|---" * (len(variants) + 2) + "|"]
     for suite, suite_apps in table.suites.items():
@@ -165,8 +200,13 @@ class DseTable:
             return None
         return (r.ics, r.hrcs, r.lbcs)
 
-    def markdown(self) -> str:
-        return _table_markdown(self)
+    def markdown(self, top_k: Optional[int] = None) -> str:
+        """Table I markdown; ``top_k`` keeps only the best variant columns."""
+        return _table_markdown(self, _top_variants(self, top_k))
+
+    def to_json(self, top_k: Optional[int] = None) -> dict:
+        """JSON-serializable table summary (uniform result protocol)."""
+        return _table_json(self, top_k)
 
     def radar_markdown(self) -> str:
         """Fig. 3 analogue: per-app ICS/HRCS/LBCS triplets per variant."""
@@ -300,8 +340,13 @@ class LazyDseTable:
         return (float(s["ICS"][a, v]), float(s["HRCS"][a, v]),
                 float(s["LBCS"][a, v]))
 
-    def markdown(self) -> str:
-        return _table_markdown(self)
+    def markdown(self, top_k: Optional[int] = None) -> str:
+        """Table I markdown; ``top_k`` keeps only the best variant columns."""
+        return _table_markdown(self, _top_variants(self, top_k))
+
+    def to_json(self, top_k: Optional[int] = None) -> dict:
+        """JSON-serializable table summary (uniform result protocol)."""
+        return _table_json(self, top_k)
 
     def radar_markdown(self) -> str:
         return _radar_markdown(self)

@@ -137,9 +137,24 @@ class FrontierResult:
     power_budget: Optional[float] = None
     area_envelope: Optional[Dict[str, float]] = None
     suffix: str = "+frontier"
+    # Continuation state (``keep_state=True``): raw per-budget theta plus
+    # the final backtracking learning rate, so a later trace can warm-start
+    # from the nearest already-solved budget (the serving front door's
+    # frontier cache).
+    continuation: Optional[Dict[float, np.ndarray]] = None
+    final_lr: Optional[np.ndarray] = None    # (V,) per-variant backtracking lr
 
     def __len__(self) -> int:
         return len(self.budgets)
+
+    def _rows(self, top_k: Optional[int]) -> List[int]:
+        """Budget rows to report: all, or the ``top_k`` best-objective
+        points (ascending budget order preserved)."""
+        if top_k is None:
+            return list(range(len(self)))
+        keep = sorted(range(len(self)),
+                      key=lambda i: (float(self.objective[i]), i))[:top_k]
+        return sorted(keep)
 
     # --------------------------- extractions -------------------------- #
 
@@ -197,7 +212,7 @@ class FrontierResult:
 
     # ----------------------------- reports ---------------------------- #
 
-    def markdown(self) -> str:
+    def markdown(self, top_k: Optional[int] = None) -> str:
         knee = self.knee() if bool(np.any(self.feasible)) else None
         lines = [
             f"feasibility frontier: {len(self)} area budgets, "
@@ -209,7 +224,7 @@ class FrontierResult:
             "| feasible | knee |",
             "|---" * 7 + "|",
         ]
-        for i in range(len(self)):
+        for i in self._rows(top_k):
             lines.append(
                 f"| {self.budgets[i]:.4g} | {self.objective[i]:.4f} "
                 f"| {self.best_names[i]} | {self.area[i]:.3f} "
@@ -222,7 +237,7 @@ class FrontierResult:
             lines += ["", f"power budget (fixed): {self.power_budget}"]
         return "\n".join(lines)
 
-    def to_json(self) -> dict:
+    def to_json(self, top_k: Optional[int] = None) -> dict:
         out = {
             "budgets": [float(b) for b in self.budgets],
             "objective": [float(j) for j in self.objective],
@@ -238,7 +253,7 @@ class FrontierResult:
                  "power": float(self.power[i]),
                  "feasible": bool(self.feasible[i]),
                  "params": self.best_params[i]}
-                for i in range(len(self))],
+                for i in self._rows(top_k)],
         }
         if bool(np.any(self.feasible)):
             out["knee"] = self.knee()
@@ -249,26 +264,38 @@ class FrontierResult:
         return out
 
 
+_FRONTIER_DEFAULTS = dict(
+    budgets=None, power_budget=None, area_envelope=None, steps=100,
+    refine_steps=None, lr=0.1, span=16.0, beta=None, timing_model="serial",
+    cost_model=DEFAULT_COST_MODEL, w_area=0.1, w_power=0.05,
+    warm_start=True, projection="shift",
+)
+
+
 def frontier_codesign(
     profiles,
     machines,
-    budgets: Sequence[float],
+    budgets: Optional[Sequence[float]] = None,
     *,
     power_budget: Optional[float] = None,
     area_envelope: Optional[Mapping[str, float]] = None,
-    steps: int = 100,
+    steps: Optional[int] = None,
     refine_steps: Optional[int] = None,
-    lr: float = 0.1,
-    span: float = 16.0,
+    lr: Optional[float] = None,
+    span: Optional[float] = None,
     beta=None,
     beta_ref: int = 0,
-    timing_model: str = "serial",
+    timing_model: Optional[str] = None,
     eps: float = K.IDEAL_EPS,
-    cost_model: CostModel = DEFAULT_COST_MODEL,
-    w_area: float = 0.1,
-    w_power: float = 0.05,
-    warm_start: bool = True,
-    projection: str = "shift",
+    cost_model: Optional[CostModel] = None,
+    w_area: Optional[float] = None,
+    w_power: Optional[float] = None,
+    warm_start: Optional[bool] = None,
+    projection: Optional[str] = None,
+    warm_theta: Optional[np.ndarray] = None,
+    warm_lr=None,                      # scalar or (V,) per-variant lr
+    keep_state: bool = False,
+    spec=None,
 ) -> FrontierResult:
     """Trace J*(budget) over a schedule of area budgets by continuation.
 
@@ -304,7 +331,35 @@ def frontier_codesign(
     True
     >>> bool((fr.area <= fr.budgets * (1 + 1e-9)).all())
     True
+
+    A ``spec=CodesignSpec(...)`` fills unset parameters, ``budgets``
+    included (explicit keyword > spec field > default).  ``warm_theta`` /
+    ``warm_lr`` resume the continuation from a previous run's saved state
+    (the serving front door's warm-start cache): the loosest budget then
+    refines for ``refine_steps`` instead of descending ``steps`` cold.
+    ``keep_state=True`` attaches the per-budget raw thetas and final
+    backtracking lr to the result (``continuation`` / ``final_lr``) so a
+    later, tighter schedule can resume.
     """
+    from repro.core.spec import resolve_spec
+
+    r = resolve_spec(spec, _FRONTIER_DEFAULTS, dict(
+        budgets=budgets, power_budget=power_budget,
+        area_envelope=area_envelope, steps=steps, refine_steps=refine_steps,
+        lr=lr, span=span, beta=beta, timing_model=timing_model,
+        cost_model=cost_model, w_area=w_area, w_power=w_power,
+        warm_start=warm_start, projection=projection))
+    budgets, power_budget = r["budgets"], r["power_budget"]
+    area_envelope, steps, refine_steps = (r["area_envelope"], r["steps"],
+                                          r["refine_steps"])
+    lr, span, beta, timing_model = r["lr"], r["span"], r["beta"], \
+        r["timing_model"]
+    cost_model, w_area, w_power = r["cost_model"], r["w_area"], r["w_power"]
+    warm_start, projection = r["warm_start"], r["projection"]
+
+    if budgets is None:
+        raise ValueError("frontier_codesign needs a budget schedule "
+                         "(budgets=... or spec.budgets)")
     asc = _validate_budget_schedule(budgets)
     area_envelope = validate_area_envelope(area_envelope)
     if power_budget is not None and not power_budget > 0.0:
@@ -339,12 +394,17 @@ def frontier_codesign(
             return out
 
         cache: dict = {}
-        theta = backend.asarray(theta0)
-        lr_v = lr
+        # A caller-provided warm_theta (e.g. the serving cache's nearest
+        # already-solved budget) replaces the cold seeds: the loosest
+        # budget then only refines, exactly like an interior budget would.
+        resumed = warm_start and warm_theta is not None
+        theta = backend.asarray(warm_theta if resumed else theta0)
+        lr_v = (warm_lr if resumed and warm_lr is not None else lr)
         raw: Dict[float, np.ndarray] = {}
         raw_obj: Dict[float, np.ndarray] = {}
         for j, b in enumerate(reversed(asc)):          # loosest -> tightest
-            n_steps = steps if (j == 0 or not warm_start) else refine_steps
+            warm = warm_start and (j > 0 or resumed)
+            n_steps = refine_steps if warm else steps
             start = theta if warm_start else backend.asarray(theta0)
             start_lr = lr_v if warm_start else lr
             theta_b, f_b, _, _, lr_out = backtracking_descent(
@@ -409,4 +469,6 @@ def frontier_codesign(
         warm_start=warm_start,
         power_budget=power_budget,
         area_envelope=area_envelope,
+        continuation=dict(raw) if keep_state else None,
+        final_lr=np.asarray(lr_v) if keep_state else None,
     )

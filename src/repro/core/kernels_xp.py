@@ -383,17 +383,31 @@ def available_backends() -> Tuple[str, ...]:
     return tuple(sorted(set(_BACKEND_FACTORIES) | set(_LAZY_BACKENDS)))
 
 
-def validate_backend_arg(parser, name: Optional[str]) -> None:
-    """argparse helper: reject an unknown ``--backend`` at parse time.
+def validate_backend_name(name: Optional[str]) -> None:
+    """Reject an unknown backend name with a ``ValueError``.
 
-    The registry is open (``register_backend``), so CLIs can't bake a
-    static ``choices=`` list; every CLI funnels through this one check so
-    a bogus name fails with the registry's current contents instead of
-    deep inside ``get_backend`` after expensive work.
+    The registry is open (``register_backend``), so callers can't bake a
+    static choices list; every entry point -- CLIs via
+    ``validate_backend_arg``, ``CodesignSpec.validate()``, the serving
+    front door -- funnels through this one check so a bogus name fails
+    with the registry's current contents instead of deep inside
+    ``get_backend`` after expensive work.  ``None`` and constructed
+    ``Backend`` instances pass (both are valid ``backend=`` values).
     """
-    if name is not None and name.lower() not in available_backends():
-        parser.error(f"unknown backend {name!r}; available: "
-                     f"{', '.join(available_backends())}")
+    if isinstance(name, Backend) or name is None:
+        return
+    if name.lower() not in available_backends():
+        raise ValueError(f"unknown backend {name!r}; available: "
+                         f"{', '.join(available_backends())}")
+
+
+def validate_backend_arg(parser, name: Optional[str]) -> None:
+    """argparse wrapper over ``validate_backend_name``: reject an unknown
+    ``--backend`` at parse time with the CLI's usage message."""
+    try:
+        validate_backend_name(name)
+    except ValueError as e:
+        parser.error(str(e))
 
 
 def get_backend(name: Optional[str] = None) -> Backend:

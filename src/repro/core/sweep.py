@@ -404,6 +404,35 @@ class ProfileBatch:
             num_devices=self.num_devices,
         )
 
+    @staticmethod
+    def concat(*batches: "ProfileBatch") -> "ProfileBatch":
+        """Concatenate suites along the app axis (micro-batch admission)."""
+        cat = lambda get: np.concatenate([get(b) for b in batches])
+        return ProfileBatch(
+            names=[n for b in batches for n in b.names],
+            flops=cat(lambda b: b.flops),
+            mem_bytes=cat(lambda b: b.mem_bytes),
+            collective_bytes=cat(lambda b: b.collective_bytes),
+            pod_collective_bytes=cat(lambda b: b.pod_collective_bytes),
+            model_flops=cat(lambda b: b.model_flops),
+            num_devices=cat(lambda b: b.num_devices),
+            profiles=[p for b in batches for p in b.profiles],
+        )
+
+    def take(self, indices) -> "ProfileBatch":
+        """Sub-suite by app index (micro-batch scatter)."""
+        idx = [int(i) for i in indices]
+        return ProfileBatch(
+            names=[self.names[i] for i in idx],
+            flops=self.flops[idx],
+            mem_bytes=self.mem_bytes[idx],
+            collective_bytes=self.collective_bytes[idx],
+            pod_collective_bytes=self.pod_collective_bytes[idx],
+            model_flops=self.model_flops[idx],
+            num_devices=self.num_devices[idx],
+            profiles=[self.profiles[i] for i in idx],
+        )
+
 
 def _as_profile_batch(profiles) -> ProfileBatch:
     if isinstance(profiles, ProfileBatch):
@@ -626,9 +655,14 @@ class SweepResult:
 
     # ----------------------------- reports ---------------------------- #
 
-    def markdown(self, top_k: int = 10,
+    def markdown(self, top_k: Optional[int] = None,
                  cost_model: CostModel = DEFAULT_COST_MODEL) -> str:
-        """Top-``top_k`` variants by suite-mean aggregate + both fronts."""
+        """Top-``top_k`` variants by suite-mean aggregate + both fronts.
+
+        ``top_k=None`` means the default of 10 -- part of the uniform
+        result protocol (every result type exposes ``markdown(top_k=...)``
+        / ``to_json(top_k=...)``; see docs/serving.md)."""
+        top_k = 10 if top_k is None else top_k
         area = self.area()
         power = self.power(cost_model)
         agg = self.aggregate_mean()
@@ -717,6 +751,32 @@ class SweepResult:
             out["aggregate"] = self.aggregate.tolist()
             out["scores"] = {k: v.tolist() for k, v in self.scores.items()}
         return out
+
+    # --------------------------- micro-batching ----------------------- #
+
+    def app_slice(self, indices) -> "SweepResult":
+        """Sub-result over a subset of app rows.
+
+        Every kernel quantity is app-rowwise independent (each row is one
+        app's profile scored against every variant), so slicing rows of a
+        merged multi-suite sweep is byte-identical to running the sweep on
+        the sub-suite directly -- the invariant the serving front door's
+        micro-batching rests on (pinned in tests/test_serving.py).
+        """
+        idx = [int(i) for i in indices]
+        return SweepResult(
+            profiles=self.profiles.take(idx),
+            machines=self.machines,
+            timing_model=self.timing_model,
+            eps=self.eps,
+            clamp=self.clamp,
+            beta=self.beta[idx],
+            gamma=self.gamma[idx],
+            alphas={k: v[idx] for k, v in self.alphas.items()},
+            scores={k: v[idx] for k, v in self.scores.items()},
+            aggregate=self.aggregate[idx],
+            backend=self.backend,
+        )
 
 
 def batched_congruence(
@@ -833,6 +893,7 @@ def run_sweep(
     timing_model: str = "serial",
     clamp: bool = True,
     backend: Optional[str] = None,
+    population: Optional[MachineBatch] = None,
 ) -> SweepResult:
     """One-call sweep: generate a population and score it.
 
@@ -843,7 +904,9 @@ def run_sweep(
     against ``beta_machine``, defaulting to the first named model or, with
     no named models, the space's nominal chip.  ``backend`` picks the
     kernel backend (``"numpy"``/``"jax"``/``"pallas"``; default resolves
-    $REPRO_SWEEP_BACKEND, then numpy).
+    $REPRO_SWEEP_BACKEND, then numpy).  ``population`` bypasses generation
+    entirely with a pre-built ``MachineBatch`` (cache hook for the serving
+    front door).
 
     Example (synthetic single-app suite):
 
@@ -862,7 +925,11 @@ def run_sweep(
     """
     profiles = _as_profile_batch(profiles)  # pack once; input may be a generator
     space = space or ParamSpace.default()
-    pop = _population(space, n, mode, seed, include_named)
+    # ``population`` bypasses generation with a pre-built batch -- the
+    # serving front door's population-cache hook (same space/n/mode/seed
+    # produce the same batch, so a cached batch scores byte-identically)
+    pop = (population if population is not None
+           else _population(space, n, mode, seed, include_named))
     beta = _resolve_beta(profiles, beta, beta_machine, include_named, space,
                          backend)
     return batched_congruence(
@@ -959,7 +1026,7 @@ class ShardedSweepResult:
 
     # ----------------------------- reports ---------------------------- #
 
-    def markdown(self, top_k: int = 10) -> str:
+    def markdown(self, top_k: Optional[int] = None) -> str:
         header = (f"sharded sweep: {self.num_variants} variants across "
                   f"{self.num_shards} shards ({self.mesh_axis}); "
                   f"{len(self.result.machines)} Pareto candidates kept")
@@ -1059,6 +1126,7 @@ def shard_sweep(
     mesh=None,
     keep_top: int = 16,
     cost_model: CostModel = DEFAULT_COST_MODEL,
+    progress=None,
 ) -> ShardedSweepResult:
     """Sharded ``run_sweep`` for populations that outgrow one device.
 
@@ -1122,14 +1190,19 @@ def shard_sweep(
     bounds = _shard_bounds(v, num_shards)
 
     # ---- statistics pass: (V,) suite means + (A,) best fits, gather-free
+    # ``progress(shard_index, num_shards, lo, hi)`` fires after each shard's
+    # statistics land (serving streams these as shard-by-shard events; a
+    # raising callback aborts the sweep -- the cancellation hook)
     if be.name == "jax":
         agg_mean, app_min, app_idx = _jax_sharded_stats(
             pb, pop, beta_vec, timing_model, clamp, mesh)
+        if progress is not None:
+            progress(0, 1, 0, v)
     else:
         agg_mean = np.empty(v, dtype=np.float64)
         app_min = np.full(len(pb), np.inf)
         app_idx = np.zeros(len(pb), dtype=np.int64)
-        for lo, hi in bounds:
+        for s, (lo, hi) in enumerate(bounds):
             out = be.congruence(pb.arrays(), pop.slice(lo, hi).arrays(),
                                 beta_vec, timing_model=timing_model,
                                 clamp=clamp)
@@ -1140,6 +1213,8 @@ def shard_sweep(
             better = local_min < app_min
             app_min = np.where(better, local_min, app_min)
             app_idx = np.where(better, local_idx + lo, app_idx)
+            if progress is not None:
+                progress(s, num_shards, lo, hi)
 
     # ---- per-shard Pareto pre-filter, then host-side merge
     area = np.asarray(cost_model.area(pop))

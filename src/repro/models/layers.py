@@ -299,12 +299,22 @@ def attn_apply(
     if cache is not None and kv_x is None and not static_cache:
         # decode/prefill-with-cache: insert k,v at cache_index
         assert cache_index is not None
-        k_cache = lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0)
-        )
-        v_cache = lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
-        )
+        idx = jnp.asarray(cache_index)
+        if idx.ndim:
+            # per-row positions (continuous batching: one index per slot);
+            # decode-only, so S == 1 and each row writes its own cache slot
+            rows = jnp.arange(B)
+            k_cache = cache["k"].at[rows, idx].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, idx].set(
+                v[:, 0].astype(cache["v"].dtype))
+        else:
+            k_cache = lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0)
+            )
+            v_cache = lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
+            )
         new_cache = {"k": k_cache, "v": v_cache}
         k, v = k_cache.astype(cd), v_cache.astype(cd)
 

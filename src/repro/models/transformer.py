@@ -658,13 +658,19 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
 
 def decode_step(params: Params, cfg: ModelConfig, cache,
                 tokens: jax.Array, index: jax.Array):
-    """One-token decode.  tokens: (B, 1); index: scalar position of the new
-    token in the context.  Returns (new_cache, logits (B, 1, V))."""
+    """One-token decode.  tokens: (B, 1); index: position of the new token in
+    the context -- a scalar shared by all rows, or a (B,) vector of per-row
+    positions (continuous batching with staggered admissions).
+    Returns (new_cache, logits (B, 1, V))."""
     B = tokens.shape[0]
     x = L.embed_apply(params["embed"], cfg, tokens)
+    index = jnp.asarray(index, jnp.int32)
     if cfg.family == Family.VLM:
         index = index + cfg.n_vision_tokens  # cache slots are absolute
-    positions = jnp.full((B, 1), index, jnp.int32)
+    if index.ndim:
+        positions = jnp.reshape(index, (B, 1))
+    else:
+        positions = jnp.full((B, 1), index, jnp.int32)
     rope = _rope_for(cfg, positions)
     q_pos = positions
 
@@ -676,7 +682,8 @@ def decode_step(params: Params, cfg: ModelConfig, cache,
             k_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32)[None],
                                      (B, S_cache))
             # slot i holds position: latest p <= index with p % S == i
-            k_pos = index - ((index - k_pos) % S_cache)
+            # (positions broadcasts (B, 1) against (B, S) for both index kinds)
+            k_pos = positions - ((positions - k_pos) % S_cache)
             write_index = slot
         else:
             k_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32)[None],
@@ -708,7 +715,7 @@ def decode_step(params: Params, cfg: ModelConfig, cache,
         W = cache["groups"]["att"]["k"].shape[2]
         slot = index % W
         k_pos = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None], (B, W))
-        k_pos = index - ((index - k_pos) % W)
+        k_pos = positions - ((positions - k_pos) % W)
         mask = L.MaskSpec(causal=True, window=cfg.attn_window)
 
         def group_f(xx, xs):
@@ -741,8 +748,12 @@ def decode_step(params: Params, cfg: ModelConfig, cache,
 
     elif cfg.family == Family.AUDIO:
         if "dec_pos" in params:
-            x = x + lax.dynamic_slice_in_dim(
-                params["dec_pos"], index, 1, axis=0).astype(x.dtype)[None]
+            if index.ndim:
+                x = x + jnp.take(params["dec_pos"], index,
+                                 axis=0)[:, None].astype(x.dtype)
+            else:
+                x = x + lax.dynamic_slice_in_dim(
+                    params["dec_pos"], index, 1, axis=0).astype(x.dtype)[None]
         S_cache = cache["self"]["k"].shape[2]
         k_pos = jnp.broadcast_to(jnp.arange(S_cache, dtype=jnp.int32)[None],
                                  (B, S_cache))

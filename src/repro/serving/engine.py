@@ -82,12 +82,20 @@ class BatchedEngine:
             slot = self.free.pop(0)
             self.active[req.rid] = req
             self.slot_of[req.rid] = slot
-            # prefill this slot token-by-token (keeps one decode code path)
-            toks = req.prompt
+            # prefill this slot token-by-token (keeps one decode code path);
+            # an empty prompt is padded with token 0 so there is always a
+            # last-token logit to sample the first generated token from
+            toks = req.prompt if req.prompt else [0]
+            nxt = None
             for i, t in enumerate(toks):
                 tok = jnp.zeros((self.slots, 1), jnp.int32).at[slot, 0].set(t)
+                idx = list(self.pos)
+                # other slots decode a dummy token at their own next position;
+                # the write is overwritten by their next real token, so
+                # concurrent prefill never corrupts an active slot's cache
+                idx[slot] = i
                 self.cache, nxt = self._decode(
-                    self.params, self.cache, tok, jnp.int32(i))
+                    self.params, self.cache, tok, jnp.asarray(idx, jnp.int32))
             self.pos[slot] = len(toks)
             req.generated.append(int(nxt[slot]))
 
@@ -96,13 +104,13 @@ class BatchedEngine:
         self._admit()
         if not self.active:
             return []
-        # all slots share a position index in this simplified engine; use max
-        index = max(self.pos[self.slot_of[r]] for r in self.active)
+        # per-slot position vector: each slot decodes at its own context
+        # length, so staggered admissions keep independent KV positions
         tok = jnp.zeros((self.slots, 1), jnp.int32)
         for rid, req in self.active.items():
             tok = tok.at[self.slot_of[rid], 0].set(req.generated[-1])
         self.cache, nxt = self._decode(self.params, self.cache, tok,
-                                       jnp.int32(index))
+                                       jnp.asarray(self.pos, jnp.int32))
         out = []
         finished = []
         for rid, req in list(self.active.items()):

@@ -619,3 +619,100 @@ def test_hillclimb_validates_codesign_args_at_parse_time():
         validate_codesign_args(p, args_of(grad=5, joint=True,
                                           area_budget=1.0,
                                           constraint_mode="lagrangian"))
+
+
+# --------------------------------------------------------------------------- #
+# CodesignSpec: the one request object (round-trip + legacy equivalence)
+# --------------------------------------------------------------------------- #
+
+
+def test_spec_json_roundtrip():
+    from repro.core.machine import TPU_V5E
+    from repro.core.spec import CodesignSpec
+
+    cm = CostModel(reference=TPU_V5E,
+                   area_weights={"peak_flops": 2.0},
+                   power_weights={"hbm_bw": 1.5})
+    spec = CodesignSpec(area_budget=1.2, power_budget=0.9,
+                        area_envelope={"hbm_bw": 0.8}, budgets=(0.5, 1.0),
+                        mode="projected", projection="euclidean", steps=7,
+                        refine_steps=2, lr=0.05, span=8.0, warm_start=True,
+                        w_area=0.2, beta=1.5, timing_model="overlap",
+                        cost_model=cm, backend="numpy", clamp=False,
+                        n=64, sweep_mode="grid", seed=3)
+    blob = spec.to_json()
+    import json
+
+    json.dumps(blob)                             # plain data only
+    back = CodesignSpec.from_json(blob)
+    assert back == spec
+    assert back.cost_model.area_weights == {"peak_flops": 2.0}
+    # None fields stay omitted and default on the way back
+    assert "optimize_links" not in blob
+    # unknown fields are rejected, not silently dropped
+    with pytest.raises(ValueError, match="unknown CodesignSpec fields"):
+        CodesignSpec.from_json({"stepz": 3})
+
+
+def test_spec_one_validation_path():
+    from repro.core.spec import CodesignSpec
+
+    with pytest.raises(ValueError, match="unknown projection"):
+        CodesignSpec(projection="diagonal").validate()
+    with pytest.raises(ValueError, match="unknown mode"):
+        CodesignSpec(mode="sideways").validate()
+    with pytest.raises(ValueError, match="unknown backend"):
+        CodesignSpec(backend="tpu9000").validate()
+    with pytest.raises(ValueError, match="positive"):
+        CodesignSpec(area_budget=0.0).validate()
+    with pytest.raises(ValueError, match="positive"):
+        CodesignSpec(budgets=[0.5, -1.0]).validate()
+    with pytest.raises(ValueError):
+        CodesignSpec(area_envelope={"not_a_field": 1.0}).validate()
+    with pytest.raises(ValueError, match="unknown sweep_mode"):
+        CodesignSpec(sweep_mode="sobol").validate()
+    # validate() normalizes: budgets ascending + deduplicated
+    norm = CodesignSpec(budgets=[1.0, 0.5, 1.0]).validate()
+    assert norm.budgets == (0.5, 1.0)
+
+
+def test_spec_legacy_kwarg_equivalence_constrained(suite):
+    """Byte-identical pin: spec-carried parameters produce the same
+    descent as the historical keyword call, and an explicit keyword
+    always beats the spec's field."""
+    from repro.core.spec import CodesignSpec
+
+    spec = CodesignSpec(area_budget=1.0, steps=6, lr=0.1,
+                        mode="projected").validate()
+    via_spec = constrained_codesign(suite, SEEDS, spec=spec)
+    via_kwargs = constrained_codesign(suite, SEEDS, area_budget=1.0,
+                                      steps=6, lr=0.1, mode="projected")
+    np.testing.assert_array_equal(via_spec.objective_final,
+                                  via_kwargs.objective_final)
+    np.testing.assert_array_equal(via_spec.trajectory, via_kwargs.trajectory)
+    assert via_spec.steps == via_kwargs.steps == 6
+    # explicit keyword wins over the spec field
+    override = constrained_codesign(suite, SEEDS, spec=spec, steps=3)
+    assert override.steps == 3
+
+
+def test_spec_legacy_kwarg_equivalence_joint_and_frontier(suite):
+    from repro.core.frontier import frontier_codesign
+    from repro.core.spec import CodesignSpec
+
+    groups = [[p] for p in suite[:2]]
+    jspec = CodesignSpec(mode="alternate", steps=4).validate()
+    j1 = joint_codesign(groups, SEEDS, spec=jspec, rounds=2)
+    j2 = joint_codesign(groups, SEEDS, mode="alternate", steps=4, rounds=2)
+    np.testing.assert_array_equal(j1.objective_final, j2.objective_final)
+
+    fspec = CodesignSpec(budgets=[0.8, 1.4], steps=4,
+                         refine_steps=2).validate()
+    f1 = frontier_codesign(suite[:1], SEEDS, spec=fspec)
+    f2 = frontier_codesign(suite[:1], SEEDS, budgets=[0.8, 1.4], steps=4,
+                           refine_steps=2)
+    np.testing.assert_array_equal(f1.objective, f2.objective)
+    assert f1.budgets.tolist() == f2.budgets.tolist()
+    # budgets may come from the spec alone; omitting both is an error
+    with pytest.raises(ValueError, match="budget schedule"):
+        frontier_codesign(suite[:1], SEEDS)

@@ -24,3 +24,19 @@ def test_serve_launcher():
         "--slots", "2", "--new-tokens", "3", "--max-len", "32",
     ])
     assert rc == 0
+
+
+def test_serve_codesign_launcher(capsys):
+    from repro.launch import serve_codesign
+
+    rc = serve_codesign.main(["--smoke", "--suites", "2", "--apps", "2"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "mega-sweep shard" in out and "frontier+warm" in out
+
+    # bad flags die at parse time through the one validation path
+    import pytest
+    with pytest.raises(SystemExit):
+        serve_codesign.main(["--smoke", "--backend", "cuda"])
+    with pytest.raises(SystemExit):
+        serve_codesign.main(["--smoke", "--budgets", "-1"])
