@@ -12,6 +12,8 @@ batched congruence engine, and dumps the best-fit variants + Pareto front
   PYTHONPATH=src:. python scripts/sweep.py --num 100000 --backend pallas
   PYTHONPATH=src:. python scripts/sweep.py --num 1000000 --shards 8 \
       --backend jax --format md
+  PYTHONPATH=src:. python scripts/sweep.py --num 10000000 --stream \
+      --shards 64 --backend pallas --checkpoint-dir /tmp/megasweep --resume
 
 Profiles come from ``benchmarks/artifacts/*.json`` (the dry-run outputs)
 when present, else the synthetic trio -- same policy as the benchmark
@@ -60,6 +62,23 @@ def main(argv=None) -> int:
                          "mesh-sharded statistics + per-shard Pareto "
                          "pre-filter, for populations that outgrow one "
                          "device (0 = single-device run_sweep)")
+    ap.add_argument("--stream", action="store_true",
+                    help="regenerate each shard's variants on the fly "
+                         "(PopulationStream): never materializes the full "
+                         "population, so --num is bounded by patience, not "
+                         "RAM; implies sharding (default shard count keeps "
+                         "chunks ~64k variants)")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="write resumable per-shard checkpoints to DIR "
+                         "(repro.checkpoint.store; atomic renames)")
+    ap.add_argument("--resume", action="store_true",
+                    help="with --checkpoint-dir: skip shards already "
+                         "completed by a previous (killed) run; results "
+                         "are byte-identical to an uninterrupted sweep")
+    ap.add_argument("--abort-after-shard", type=int, default=None,
+                    metavar="S", help="exit(3) after shard S completes "
+                         "(deterministic kill hook for the CI resume "
+                         "round-trip smoke)")
     ap.add_argument("--no-named", action="store_true",
                     help="do not prepend baseline/denser/densest")
     ap.add_argument("--top", type=int, default=16)
@@ -70,6 +89,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.num < 1:
         ap.error("--num must be >= 1")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
     validate_backend(ap, args.backend)
 
     profiles, synthetic = common.profiles_or_synthetic(args.mesh)
@@ -85,15 +106,38 @@ def main(argv=None) -> int:
         timing_model=args.timing_model,
         backend=args.backend,
     )
-    if args.shards > 0:
-        # keep_top must cover --top: each shard keeps its local top-k, so a
-        # smaller keep would silently prune global ranks out of the report.
-        sharded = shard_sweep(profiles, num_shards=args.shards,
-                              keep_top=max(16, args.top), **sweep_kwargs)
+    if args.shards > 0 or args.stream or args.checkpoint_dir:
+        progress = None
+        if args.abort_after_shard is not None:
+            class _Abort(Exception):
+                pass
+
+            def progress(s, num_shards, lo, hi):
+                print(f"shard {s + 1}/{num_shards} done [{lo}, {hi})",
+                      file=sys.stderr)
+                if s >= args.abort_after_shard:
+                    raise _Abort
+        try:
+            # keep_top must cover --top: each shard keeps its local top-k,
+            # so a smaller keep would silently prune global ranks out of
+            # the report.
+            sharded = shard_sweep(
+                profiles,
+                num_shards=args.shards if args.shards > 0 else None,
+                keep_top=max(16, args.top), stream=args.stream,
+                checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+                progress=progress, **sweep_kwargs)
+        except _Abort if args.abort_after_shard is not None else ():
+            print(f"aborted after shard {args.abort_after_shard} "
+                  f"(checkpoint in {args.checkpoint_dir})", file=sys.stderr)
+            return 3
         result = sharded.result
+        resumed = (f", {sharded.resumed_shards} shards resumed"
+                   if sharded.resumed_shards else "")
         print(f"shard-swept {len(result.profiles)} apps x "
               f"{sharded.num_variants} variants in {sharded.num_shards} "
               f"shards ({sharded.mesh_axis}, {result.backend} backend"
+              f"{', streamed' if sharded.streamed else ''}{resumed}"
               f"{', SYNTHETIC profiles' if synthetic else ''}); "
               f"{len(result.machines)} Pareto candidates kept; front: "
               f"{len(sharded.pareto_front())} variants "

@@ -76,12 +76,15 @@ from repro.core.sweep import (
     Dim,
     MachineBatch,
     ParamSpace,
+    PopulationStream,
     ProfileBatch,
     ShardedSweepResult,
     SweepResult,
     batched_congruence,
     batched_step_time,
+    load_population,
     run_sweep,
+    save_population,
     shard_sweep,
 )
 from repro.core.timing import TimingBreakdown, step_time, subsystem_times

@@ -275,5 +275,102 @@ class PallasBackend(Backend):
             aggregate=out[7],
         )
 
+    # -- mesh-sharded statistics pass ----------------------------------- #
+
+    def sharded_stats(self, p, m, beta, mesh, timing_model="serial",
+                      clamp=False, pad_to=None):
+        """ONE fused ``pallas_call`` with the variant axis split over ``mesh``.
+
+        ``jax.shard_map`` hands each device its local slice of the machine
+        stack (profiles replicated); the device runs the same gridded fused
+        kernel as ``congruence`` over its slice, then reduces ON-DEVICE to
+        the per-variant suite means and per-app min/argmin.  Global variant
+        indices come from ``lax.axis_index`` -- pad and out-of-chunk
+        columns are masked to ``+inf`` before the min, so the merge is
+        exact.  Only the ``(V_local,)`` means and ``(A,)`` rows leave the
+        device; the ``(A, V_local)`` score tile is never gathered.
+
+        The host-side merge over the per-device ``(ndev, A)`` stacks picks
+        the first device attaining the min, and each device's argmin is the
+        first in its slice -- device order equals index order, so the
+        combined argmin is first-occurrence, matching the numpy reference.
+        """
+        jax, jnp = self._jax, self._jnp
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # jax<0.5 keeps it under experimental
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        axis = mesh.axis_names[0]
+        ndev = int(mesh.size)
+        v = int(np.asarray(m.peak_flops).shape[0])
+        if v == 0:
+            return None
+
+        # Per-device slice width: cover max(v, pad_to) variants, rounded so
+        # every device holds the same tile-aligned slice.
+        target = max(v, int(pad_to or 0))
+        local = -(-target // ndev)
+        tile = min(self.tile_v, _round_up(max(local, 1), _LANES))
+        local_pad = _round_up(max(local, 1), tile)
+        v_pad = local_pad * ndev
+
+        m_stack = np.stack([np.asarray(f, dtype=np.float32) for f in m])
+        if v_pad != v:
+            pad = np.ones((_M_ROWS, v_pad - v), dtype=np.float32)
+            m_stack = np.concatenate([m_stack, pad], axis=1)
+        p_stack = self._profile_stack(p, beta)
+        a = p_stack.shape[1]
+
+        mesh_key = (axis, tuple(int(d.id) for d in mesh.devices.flat))
+        key = (f"sharded/{a}/{v}/{local_pad}/{tile}/{timing_model}/"
+               f"{clamp}/{mesh_key}")
+        if key not in self._jit_cache:
+            body = functools.partial(_congruence_body, self._jnp,
+                                     timing_model, IDEAL_EPS, clamp)
+
+            def local_stats(p_s, m_local):
+                out = self._pl.pallas_call(
+                    body,
+                    out_shape=jax.ShapeDtypeStruct(
+                        (_OUT_ROWS, a, local_pad), jnp.float32),
+                    grid=(local_pad // tile,),
+                    in_specs=[
+                        self._pl.BlockSpec((_P_ROWS, a), lambda i: (0, 0)),
+                        self._pl.BlockSpec((_M_ROWS, tile), lambda i: (0, i)),
+                    ],
+                    out_specs=self._pl.BlockSpec(
+                        (_OUT_ROWS, a, tile), lambda i: (0, 0, i)),
+                    interpret=self.interpret,
+                )(p_s, m_local)
+                agg = out[_OUT_ROWS - 1]
+                lo = jax.lax.axis_index(axis) * local_pad
+                valid = (lo + jnp.arange(local_pad)) < v
+                masked = jnp.where(valid[None, :], agg, jnp.inf)
+                return (agg.mean(axis=0),
+                        masked.min(axis=1)[None, :],
+                        (masked.argmin(axis=1) + lo)[None, :])
+
+            fn = shard_map(
+                local_stats,
+                mesh=mesh,
+                in_specs=(PartitionSpec(), PartitionSpec(None, axis)),
+                out_specs=(PartitionSpec(axis), PartitionSpec(axis),
+                           PartitionSpec(axis)),
+                check_rep=False,
+            )
+            self._jit_cache[key] = self._jax.jit(fn)
+
+        agg, mins, idxs = self._jit_cache[key](
+            self.asarray(p_stack), self.asarray(m_stack))
+        agg = np.asarray(agg)[:v].astype(np.float64)
+        mins = np.asarray(mins)          # (ndev, A)
+        idxs = np.asarray(idxs)          # (ndev, A) global-within-chunk
+        dev = np.argmin(mins, axis=0)    # first device attaining the min
+        cols = np.arange(mins.shape[1])
+        return (agg,
+                mins[dev, cols].astype(np.float64),
+                idxs[dev, cols].astype(np.int64))
+
 
 register_backend("pallas", PallasBackend)

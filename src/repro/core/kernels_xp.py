@@ -258,6 +258,32 @@ class Backend:
         """Run the full pass and return *NumPy* ``CongruenceArrays``."""
         raise NotImplementedError
 
+    def sharded_stats(self, p: ProfileArrays, m: MachineArrays, beta, mesh,
+                      timing_model: str = "serial", clamp: bool = False,
+                      pad_to: Optional[int] = None):
+        """Mesh-sharded, gather-free statistics pass over one variant chunk.
+
+        The mega-sweep reduction: score the ``(A, V_chunk)`` cross-product
+        with the variant axis split over ``mesh`` and reduce ON-DEVICE to
+        the three statistics ``shard_sweep`` merges -- per-variant
+        suite-mean aggregates ``(V_chunk,)``, per-app minima ``(A,)`` and
+        per-app argmin indices ``(A,)`` (0-based within the chunk).  Only
+        those O(V) + O(A) rows ever cross devices; the score tensor stays
+        sharded and is discarded.
+
+        ``pad_to`` is a chunk-width hint: implementations pad the variant
+        axis up to at least ``pad_to`` (with benign machines, masked out of
+        the reductions) so equal-width chunks of a sharded loop share ONE
+        compiled artifact instead of retracing per remainder chunk.
+
+        Backends without a distribution strategy return ``None`` --
+        ``shard_sweep`` then falls back to the host-chunked loop.  The
+        ``jax`` backend shards via ``NamedSharding`` placement; the
+        ``pallas`` backend runs its fused kernel under ``jax.shard_map``
+        (see ``repro.core.kernels_pallas``).
+        """
+        return None
+
 
 class NumpyBackend(Backend):
     """Eager float64 NumPy -- the default and the numerical reference."""
@@ -354,6 +380,62 @@ class JaxBackend(Backend):
                      self.asarray(beta), timing_model=timing_model,
                      eps=eps, clamp=clamp)
             return CongruenceArrays(*(self.to_numpy(f) for f in out))
+
+    def sharded_stats(self, p, m, beta, mesh, timing_model="serial",
+                      clamp=False, pad_to=None):
+        """Shard the variant axis over ``mesh`` via ``NamedSharding``.
+
+        Machine columns are placed split along the mesh axis, profiles and
+        beta replicated; the jitted reduction then runs SPMD and only the
+        ``(V_chunk,)`` means plus ``(A,)`` min/argmin rows come back to the
+        host.  The chunk is padded (all-1.0 machines, masked to ``+inf``
+        before the min/argmin) to a multiple of the device count and at
+        least ``pad_to`` so every equal-width chunk reuses one executable.
+        """
+        jax, jnp = self._jax, self._jnp
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        axis = mesh.axis_names[0]
+        ndev = int(mesh.size)
+        v = int(np.asarray(m.peak_flops).shape[0])
+        if v == 0:
+            return None
+        v_pad = max(v, int(pad_to or 0))
+        v_pad = -(-v_pad // ndev) * ndev
+
+        with self._x64():
+            split = NamedSharding(mesh, PartitionSpec(axis))
+            rep = NamedSharding(mesh, PartitionSpec())
+
+            def _col(f):
+                arr = np.asarray(f, dtype=np.float64)
+                if v_pad != v:
+                    arr = np.concatenate([arr, np.ones(v_pad - v)])
+                return jax.device_put(jnp.asarray(arr), split)
+
+            m_dev = MachineArrays(*(_col(f) for f in m))
+            p_dev = ProfileArrays(
+                *(jax.device_put(self.asarray(f), rep) for f in p))
+            beta_dev = jax.device_put(self.asarray(beta), rep)
+
+            key = f"sharded_stats/{v}/{v_pad}"
+            if key not in self._jit_cache:
+                def stats(p, m, beta, timing_model, clamp):
+                    out = congruence_kernel(jnp, p, m, beta, timing_model,
+                                            clamp=clamp)
+                    masked = jnp.where(jnp.arange(v_pad)[None, :] < v,
+                                       out.aggregate, jnp.inf)
+                    return (out.aggregate.mean(axis=0),
+                            masked.min(axis=1),
+                            masked.argmin(axis=1))
+                self._jit_cache[key] = jax.jit(
+                    stats, static_argnames=("timing_model", "clamp"))
+            agg, app_min, app_idx = self._jit_cache[key](
+                p_dev, m_dev, beta_dev, timing_model=timing_model,
+                clamp=clamp)
+            return (np.asarray(agg)[:v],
+                    np.asarray(app_min),
+                    np.asarray(app_idx).astype(np.int64))
 
 
 _BACKEND_FACTORIES: Dict[str, Callable[[], Backend]] = {

@@ -37,8 +37,10 @@ configurable ``repro.core.costmodel.CostModel`` (the PPA trade-off of §I).
 from __future__ import annotations
 
 import dataclasses
-import functools
+import hashlib
 import itertools
+import json
+import os
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -125,20 +127,32 @@ def _radical_inverse(index: np.ndarray, base: int) -> np.ndarray:
     return inv
 
 
+def halton_at(indices, d: int, seed: int = 0) -> np.ndarray:
+    """Rows ``indices`` of the seeded Halton sequence, shape ``(len, d)``.
+
+    The radical inverse is elementwise in the index, so any subset of rows
+    is byte-identical to slicing ``halton(n, d, seed)`` -- the property
+    that lets ``PopulationStream`` regenerate an arbitrary shard of a
+    mega-sweep population without materializing the rest.
+    """
+    if d > len(_HALTON_PRIMES):
+        raise ValueError(f"halton supports at most {len(_HALTON_PRIMES)} dims")
+    idx = np.asarray(indices, dtype=np.int64)
+    shifts = np.random.default_rng(seed).random(d)
+    out = np.empty((idx.shape[0], d), dtype=np.float64)
+    for j in range(d):
+        out[:, j] = (_radical_inverse(idx + 1, _HALTON_PRIMES[j])
+                     + shifts[j]) % 1.0
+    return out
+
+
 def halton(n: int, d: int, seed: int = 0) -> np.ndarray:
     """``(n, d)`` low-discrepancy points in [0, 1).
 
     Halton sequence with a seeded Cranley-Patterson rotation so different
     seeds give different (still low-discrepancy) populations.
     """
-    if d > len(_HALTON_PRIMES):
-        raise ValueError(f"halton supports at most {len(_HALTON_PRIMES)} dims")
-    shifts = np.random.default_rng(seed).random(d)
-    out = np.empty((n, d), dtype=np.float64)
-    for j in range(d):
-        out[:, j] = (_radical_inverse(np.arange(1, n + 1), _HALTON_PRIMES[j])
-                     + shifts[j]) % 1.0
-    return out
+    return halton_at(np.arange(n), d, seed=seed)
 
 
 @dataclasses.dataclass
@@ -198,14 +212,30 @@ class ParamSpace:
 
     def _columns_to_batch(self, cols: Dict[str, np.ndarray], n: int,
                           prefix: str) -> "MachineBatch":
+        return self._columns_to_batch_at(cols, np.arange(n), prefix)
+
+    def _columns_to_batch_at(self, cols: Dict[str, np.ndarray], indices,
+                             prefix: str) -> "MachineBatch":
+        """Pack generated columns, naming rows by their GLOBAL indices --
+        so a regenerated shard carries the same names as the full batch."""
+        idx = np.asarray(indices, dtype=np.int64)
         full = {}
         for name in SWEEP_PARAMS:
             if name in cols:
                 full[name] = np.asarray(cols[name], dtype=np.float64)
             else:
-                full[name] = np.full(n, self._nominal_value(name))
+                full[name] = np.full(idx.shape[0], self._nominal_value(name))
         return MachineBatch(
-            names=[f"{prefix}{i:05d}" for i in range(n)], **full)
+            names=[f"{prefix}{i:05d}" for i in idx], **full)
+
+    def grid_axes(self, points: Union[int, Mapping[str, int]] = 3
+                  ) -> Dict[str, np.ndarray]:
+        """Per-dimension grid point arrays (the factors of ``grid``'s
+        cross-product), WITHOUT materializing the product itself."""
+        if isinstance(points, int):
+            points = {name: points for name in self.dims}
+        return {name: self.dims[name].points(k) for name, k in points.items()
+                if name in self.dims}
 
     def grid(self, points: Union[int, Mapping[str, int]] = 3) -> "MachineBatch":
         """Full cross-product grid.
@@ -213,23 +243,49 @@ class ParamSpace:
         ``points`` is either a per-dimension count mapping or one count
         applied to every dimension in the space.
         """
-        if isinstance(points, int):
-            points = {name: points for name in self.dims}
-        axes = {name: self.dims[name].points(k) for name, k in points.items()
-                if name in self.dims}
+        axes = self.grid_axes(points)
         names = list(axes)
         combos = list(itertools.product(*(axes[n] for n in names)))
         cols = {n: np.array([c[i] for c in combos], dtype=np.float64)
                 for i, n in enumerate(names)}
         return self._columns_to_batch(cols, len(combos), "grid-")
 
+    def grid_at(self, indices, points: Union[int, Mapping[str, int]] = 3
+                ) -> "MachineBatch":
+        """Rows ``indices`` of ``grid(points)`` without building the grid.
+
+        ``itertools.product`` emits combinations in row-major order, so row
+        ``i`` unravels to per-dimension positions by mixed-radix division --
+        an O(len(indices)) computation regardless of the grid's size.
+        """
+        axes = self.grid_axes(points)
+        names = list(axes)
+        lens = [len(axes[n]) for n in names]
+        idx = np.asarray(indices, dtype=np.int64)
+        cols = {}
+        stride = 1
+        strides = [0] * len(names)
+        for j in range(len(names) - 1, -1, -1):
+            strides[j] = stride
+            stride *= lens[j]
+        for j, n in enumerate(names):
+            cols[n] = axes[n][(idx // strides[j]) % lens[j]]
+        return self._columns_to_batch_at(cols, idx, "grid-")
+
     def sample(self, n: int, seed: int = 0) -> "MachineBatch":
         """``n`` low-discrepancy (Halton) samples across every dimension."""
+        return self.sample_at(np.arange(n), seed=seed)
+
+    def sample_at(self, indices, seed: int = 0) -> "MachineBatch":
+        """Rows ``indices`` of ``sample(n, seed)`` -- byte-identical to
+        slicing the full draw (``halton_at`` is elementwise in the index),
+        which is what lets streamed mega-sweeps regenerate any shard."""
         names = list(self.dims)
-        unit = halton(n, len(names), seed=seed)
+        idx = np.asarray(indices, dtype=np.int64)
+        unit = halton_at(idx, len(names), seed=seed)
         cols = {name: self.dims[name].from_unit(unit[:, j])
                 for j, name in enumerate(names)}
-        return self._columns_to_batch(cols, n, "sweep-")
+        return self._columns_to_batch_at(cols, idx, "sweep-")
 
 
 # --------------------------------------------------------------------------- #
@@ -863,6 +919,217 @@ def _population(space: ParamSpace, n: int, mode: str, seed: int,
     return pop
 
 
+# --------------------------------------------------------------------------- #
+# Streamed populations: V >> RAM without ever holding the full MachineBatch
+# --------------------------------------------------------------------------- #
+
+
+class PopulationStream:
+    """Index-addressable population source for mega-sweeps.
+
+    ``_population`` materializes all ``V`` variants up front -- fine to a
+    few million, fatal at 100M+.  A stream instead REGENERATES any index
+    range on demand: Halton rows are elementwise in the sample index
+    (``ParamSpace.sample_at``) and grid rows unravel by mixed-radix
+    division (``grid_at``), so ``batch(lo, hi)`` for any shard is
+    byte-identical to ``_population(...)[lo:hi]`` while only that shard
+    ever exists in memory.  Named models (the paper's baseline ladder) are
+    prepended exactly as ``_population`` prepends them.
+
+    ``load_population`` returns the second flavor: fields memory-mapped
+    from a ``save_population`` directory, for populations generated
+    elsewhere (or expensive spaces worth generating once).
+
+    >>> from repro.core import ParamSpace
+    >>> from repro.core.sweep import PopulationStream, _population
+    >>> space = ParamSpace.default()
+    >>> stream = PopulationStream(space, 1000, seed=3)
+    >>> full = _population(space, 1000, "random", 3, [])
+    >>> shard = stream.batch(400, 500)
+    >>> shard.names == full.names[400:500]
+    True
+    >>> bool((shard.peak_flops == full.peak_flops[400:500]).all())
+    True
+    """
+
+    def __init__(self, space: ParamSpace, n: int, mode: str = "random",
+                 seed: int = 0,
+                 include_named: Sequence[MachineModel] = ()):
+        self.space = space
+        self.mode = mode
+        self.seed = seed
+        self._n_request = n
+        self._named_models = list(include_named)
+        self.named = (MachineBatch.from_models(self._named_models)
+                      if self._named_models else None)
+        if mode == "random":
+            self._grid_points = None
+            self._gen_n = int(n)
+        elif mode == "grid":
+            per_dim = max(2, int(np.ceil(
+                n ** (1.0 / max(len(space.dims), 1)))))
+            self._grid_points = per_dim
+            lens = [len(a) for a in space.grid_axes(per_dim).values()]
+            self._gen_n = int(np.prod(lens)) if lens else 1
+        else:
+            raise ValueError(f"unknown sweep mode {mode!r}")
+        self._fields = None  # set by _from_dir for the memory-mapped flavor
+        self._names_arr = None
+
+    @classmethod
+    def _from_dir(cls, path: str) -> "PopulationStream":
+        obj = cls.__new__(cls)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        obj.space = None
+        obj.mode = "mmap"
+        obj.seed = 0
+        obj._n_request = int(meta["num_variants"])
+        obj._named_models = []
+        obj.named = None
+        obj._grid_points = None
+        obj._gen_n = int(meta["num_variants"])
+        obj._fields = {
+            name: np.load(os.path.join(path, f"{name}.npy"), mmap_mode="r")
+            for name in SWEEP_PARAMS}
+        obj._names_arr = np.load(os.path.join(path, "names.npy"),
+                                 mmap_mode="r")
+        obj.path = path
+        return obj
+
+    # ------------------------------------------------------------------ #
+
+    def __len__(self) -> int:
+        k = len(self.named) if self.named is not None else 0
+        return k + self._gen_n
+
+    @property
+    def num_named(self) -> int:
+        return len(self.named) if self.named is not None else 0
+
+    def _generated(self, idx: np.ndarray) -> MachineBatch:
+        """Generated rows by 0-based GENERATED index (named rows excluded)."""
+        if self._fields is not None:
+            sel = {name: np.asarray(arr[idx], dtype=np.float64)
+                   for name, arr in self._fields.items()}
+            return MachineBatch(
+                names=[str(n) for n in self._names_arr[idx]], **sel)
+        if self.mode == "random":
+            return self.space.sample_at(idx, seed=self.seed)
+        return self.space.grid_at(idx, self._grid_points)
+
+    def batch(self, lo: int, hi: int) -> MachineBatch:
+        """Contiguous ``[lo, hi)`` slice -- one shard of a streamed sweep."""
+        k = self.num_named
+        parts = []
+        if lo < k:
+            parts.append(self.named.slice(lo, min(hi, k)))
+        if hi > k:
+            parts.append(self._generated(np.arange(max(lo - k, 0), hi - k)))
+        return parts[0] if len(parts) == 1 else MachineBatch.concat(*parts)
+
+    def take(self, indices) -> MachineBatch:
+        """Arbitrary rows by global index (the survivor re-score gather)."""
+        idx = np.asarray(indices, dtype=np.int64)
+        k = self.num_named
+        if k == 0:
+            return self._generated(idx)
+        named_mask = idx < k
+        if named_mask.all():
+            return self.named.take(idx)
+        if not named_mask.any():
+            return self._generated(idx - k)
+        named_part = self.named.take(idx[named_mask])
+        gen_part = self._generated(idx[~named_mask] - k)
+        pos_named = np.nonzero(named_mask)[0]
+        pos_gen = np.nonzero(~named_mask)[0]
+        fields = {}
+        for name in SWEEP_PARAMS:
+            col = np.empty(idx.shape[0], dtype=np.float64)
+            col[pos_named] = getattr(named_part, name)
+            col[pos_gen] = getattr(gen_part, name)
+            fields[name] = col
+        names: List[str] = [""] * idx.shape[0]
+        for j, nm in zip(pos_named, named_part.names):
+            names[j] = nm
+        for j, nm in zip(pos_gen, gen_part.names):
+            names[j] = nm
+        return MachineBatch(names=names, **fields)
+
+    def materialize(self) -> MachineBatch:
+        """The full batch (smoke-scale equality tests; do NOT call at 100M)."""
+        if self._fields is not None:
+            return self.batch(0, len(self))
+        return _population(self.space, self._n_request, self.mode, self.seed,
+                           self._named_models)
+
+    # ------------------------------------------------------------------ #
+
+    def _name_width(self) -> int:
+        if self._names_arr is not None:
+            return self._names_arr.dtype.itemsize // 4
+        prefix = "sweep-" if self.mode == "random" else "grid-"
+        digits = max(5, len(str(max(self._gen_n - 1, 0))))
+        width = len(prefix) + digits
+        if self.named is not None:
+            width = max(width, max(len(n) for n in self.named.names))
+        return width
+
+    def signature(self) -> str:
+        """Cheap identity for checkpoint-compatibility checks."""
+        if self._fields is not None:
+            return f"mmap:{os.path.abspath(self.path)}:{self._gen_n}"
+        named = ",".join(m.name for m in self._named_models)
+        return (f"gen:{self.mode}:{self.seed}:{self._n_request}:"
+                f"[{named}]:{self.space!r}")
+
+
+def save_population(path: str, population, shard_size: int = 1 << 16) -> str:
+    """Write a population to ``path/`` as memory-mappable arrays.
+
+    One float64 ``.npy`` per sweep parameter plus fixed-width unicode
+    ``names.npy`` and a ``meta.json``; written shard-by-shard through
+    ``np.lib.format.open_memmap`` so saving a ``PopulationStream`` never
+    materializes it.  Float64 round-trips exactly, so a sweep over
+    ``load_population(path)`` is byte-identical to one over the source.
+    """
+    if not isinstance(population, (MachineBatch, PopulationStream)):
+        population = _as_machine_batch(population)
+    os.makedirs(path, exist_ok=True)
+    v = len(population)
+    if isinstance(population, MachineBatch):
+        width = max((len(n) for n in population.names), default=1)
+        get = population.slice
+    else:
+        width = population._name_width()
+        get = population.batch
+    mm = {
+        name: np.lib.format.open_memmap(
+            os.path.join(path, f"{name}.npy"), mode="w+",
+            dtype=np.float64, shape=(v,))
+        for name in SWEEP_PARAMS}
+    names_mm = np.lib.format.open_memmap(
+        os.path.join(path, "names.npy"), mode="w+",
+        dtype=f"<U{max(width, 1)}", shape=(v,))
+    for lo in range(0, v, shard_size):
+        hi = min(lo + shard_size, v)
+        b = get(lo, hi)
+        for name in SWEEP_PARAMS:
+            mm[name][lo:hi] = getattr(b, name)
+        names_mm[lo:hi] = b.names
+    for arr in list(mm.values()) + [names_mm]:
+        arr.flush()
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"version": 1, "num_variants": v,
+                   "params": list(SWEEP_PARAMS)}, f)
+    return path
+
+
+def load_population(path: str) -> PopulationStream:
+    """Memory-mapped ``PopulationStream`` over a ``save_population`` dir."""
+    return PopulationStream._from_dir(path)
+
+
 def _resolve_beta(profiles: ProfileBatch, beta, beta_machine,
                   include_named: Sequence[MachineModel],
                   space: ParamSpace, backend) -> np.ndarray:
@@ -971,6 +1238,8 @@ class ShardedSweepResult:
     mesh_axis: str                   # shard layout, e.g. "variants=4 mesh"
     best_fit_map: Dict[str, str]     # app -> best variant over ALL V
     cost_model: CostModel            # the model the pre-filter ran with
+    streamed: bool = False           # population generated/mapped per shard
+    resumed_shards: int = 0          # shards skipped via checkpoint resume
 
     # ------------------------------ lookups --------------------------- #
 
@@ -1027,8 +1296,9 @@ class ShardedSweepResult:
     # ----------------------------- reports ---------------------------- #
 
     def markdown(self, top_k: Optional[int] = None) -> str:
+        layout = self.mesh_axis + (", streamed" if self.streamed else "")
         header = (f"sharded sweep: {self.num_variants} variants across "
-                  f"{self.num_shards} shards ({self.mesh_axis}); "
+                  f"{self.num_shards} shards ({layout}); "
                   f"{len(self.result.machines)} Pareto candidates kept")
         return header + "\n\n" + self.result.markdown(top_k, self.cost_model)
 
@@ -1039,6 +1309,8 @@ class ShardedSweepResult:
             num_candidates=len(self.result.machines),
             num_shards=self.num_shards,
             mesh_axis=self.mesh_axis,
+            streamed=self.streamed,
+            resumed_shards=self.resumed_shards,
             best_fit={app: self.best_fit_map[app] for app in self.apps},
         )
         return out
@@ -1055,58 +1327,29 @@ def _shard_bounds(v: int, num_shards: int) -> List[Tuple[int, int]]:
     return bounds
 
 
-def _jax_sharded_stats(pb: ProfileBatch, pop: MachineBatch,
-                       beta_vec: np.ndarray, timing_model: str, clamp: bool,
-                       mesh) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Device-sharded statistics pass for the jax backend.
+#: Default shard width when streaming without an explicit ``num_shards`` --
+#: bounds the regenerated chunk (and the sharded (A, chunk) score slice) to
+#: a few MB regardless of V.
+STREAM_SHARD_VARIANTS = 65536
 
-    The machine arrays are placed with ``NamedSharding`` over the mesh's
-    variant axis, so the jitted congruence pass partitions across devices
-    and each device only ever holds its ``(A, V/ndev)`` slice of the score
-    tensor.  Only the O(V) per-variant aggregate and the O(A) best-fit
-    reductions are gathered -- the (A, V) tensors never are.
+
+def _sweep_signature(pop_tag: str, v: int, num_shards: int, backend_name: str,
+                     timing_model: str, clamp: bool, keep_top: int,
+                     cost_model: CostModel, beta_vec: np.ndarray) -> str:
+    """Configuration fingerprint stored with every sweep checkpoint.
+
+    ``resume=`` refuses to merge state produced under a different
+    population, backend, shard layout or scoring config -- silently mixing
+    those would produce plausible-looking wrong fronts.
     """
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental import enable_x64
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    axis = mesh.axis_names[0]
-    ndev = mesh.size
-    v = len(pop)
-    v_pad = -(-v // ndev) * ndev
-    with enable_x64():
-        m_fields = []
-        for f in pop.arrays():
-            arr = np.asarray(f, dtype=np.float64)
-            if v_pad != v:  # benign all-1.0 pad machines, sliced off below
-                arr = np.concatenate([arr, np.ones(v_pad - v)])
-            m_fields.append(jax.device_put(
-                jnp.asarray(arr), NamedSharding(mesh, P(axis))))
-        m = K.MachineArrays(*m_fields)
-        replicated = NamedSharding(mesh, P())
-        p = K.ProfileArrays(*(jax.device_put(
-            jnp.asarray(np.asarray(f, dtype=np.float64)), replicated)
-            for f in pb.arrays()))
-        beta = jax.device_put(jnp.asarray(beta_vec), replicated)
-
-        @functools.partial(jax.jit, static_argnames=("timing_model", "clamp"))
-        def stats(p, m, beta, timing_model, clamp):
-            out = K.congruence_kernel(jnp, p, m, beta, timing_model,
-                                      clamp=clamp)
-            # The pad machines are benign but still score; mask them to
-            # +inf before the variant-axis reductions so a pad column can
-            # never win an app's argmin (v/v_pad are static ints, so the
-            # mask is elementwise and preserves the variant sharding).
-            masked = jnp.where(jnp.arange(v_pad) < v, out.aggregate, jnp.inf)
-            return (out.aggregate.mean(axis=0),  # (V_pad,) suite mean
-                    masked.min(axis=1),          # (A,) best value
-                    masked.argmin(axis=1))       # (A,) best index, < v
-
-        agg, app_min, app_idx = stats(p, m, beta, timing_model=timing_model,
-                                      clamp=clamp)
-    return (np.asarray(agg)[:v], np.asarray(app_min),
-            np.asarray(app_idx).astype(np.int64))
+    h = hashlib.blake2b(digest_size=16)
+    for part in (pop_tag, str(v), str(num_shards), backend_name,
+                 timing_model, str(bool(clamp)), str(int(keep_top)),
+                 repr(cost_model)):
+        h.update(part.encode())
+        h.update(b"\0")
+    h.update(np.asarray(beta_vec, dtype=np.float64).tobytes())
+    return h.hexdigest()
 
 
 def shard_sweep(
@@ -1127,20 +1370,30 @@ def shard_sweep(
     keep_top: int = 16,
     cost_model: CostModel = DEFAULT_COST_MODEL,
     progress=None,
+    stream: bool = False,
+    population=None,
+    checkpoint_dir: Optional[str] = None,
+    resume: bool = False,
+    checkpoint_keep: int = 2,
 ) -> ShardedSweepResult:
     """Sharded ``run_sweep`` for populations that outgrow one device.
 
     Same population, beta convention and scoring as ``run_sweep`` (same
     ``space``/``n``/``mode``/``seed`` give bitwise-identical variants), but
-    the ``(A, V)`` score tensor is never materialized in one place:
+    the ``(A, V)`` score tensor is never materialized in one place.  Every
+    backend walks the population in ``num_shards`` contiguous chunks;
+    backends with a distribution strategy additionally split each chunk's
+    variant axis over ``mesh`` (built via ``repro.launch.mesh``; default
+    one ``("variants",)`` axis over every local device):
 
-      * **jax backend** -- the machine arrays are placed across ``mesh``
-        (built via the ``repro.launch.mesh`` shims; default one axis over
-        every local device) with ``jax.sharding.NamedSharding``, so the
-        jitted kernels partition the population and each device holds only
-        its ``(A, V/ndev)`` slice.
-      * **numpy / pallas backends** -- the population is scored shard by
-        shard (``num_shards`` chunks), bounding peak memory at
+      * **jax backend** -- machine arrays placed with
+        ``jax.sharding.NamedSharding``, so the jitted kernels partition
+        the chunk and each device holds only its ``(A, chunk/ndev)``
+        slice (``JaxBackend.sharded_stats``).
+      * **pallas backend** -- ONE fused ``pallas_call`` under
+        ``jax.shard_map``: every device runs the fused kernel over its
+        slice and reduces on-device (``PallasBackend.sharded_stats``).
+      * **numpy / custom backends** -- host-chunked scoring, peak memory
         ``O(A * V / num_shards)``.
 
     Either way, each shard is reduced *in place* to per-variant suite-mean
@@ -1165,80 +1418,169 @@ def shard_sweep(
     True
     >>> sharded.best_fit("app0") == single.best_fit("app0")
     True
+
+    **Streaming** (``stream=True``, or passing a ``PopulationStream`` /
+    ``load_population`` dir as ``population=``): each shard's variants are
+    regenerated (or memory-mapped) on demand, so neither the ``(A, V)``
+    tensor nor the full ``MachineBatch`` ever exists -- V is bounded by
+    disk/patience, not RAM.  Streamed shards are byte-identical to slices
+    of the materialized population, so results match exactly.
+
+    **Resume** (``checkpoint_dir=``): after every shard the merged per-app
+    minima + Pareto survivors are written atomically through
+    ``repro.checkpoint.store``; ``resume=True`` restores the latest
+    checkpoint (refusing a config mismatch), skips completed shards and
+    returns byte-identical fronts to an uninterrupted run.
     """
     pb = _as_profile_batch(profiles)
     space = space or ParamSpace.default()
-    pop = _population(space, n, mode, seed, include_named)
     be = K.get_backend(backend)
+
+    # ---- population source: materialized batch or per-shard stream
+    src: Optional[PopulationStream] = None
+    pop: Optional[MachineBatch] = None
+    if population is not None:
+        if isinstance(population, PopulationStream):
+            src = population
+            pop_tag = src.signature()
+        else:
+            pop = _as_machine_batch(population)
+            h = hashlib.blake2b("\0".join(pop.names).encode(),
+                                digest_size=16)
+            pop_tag = f"batch:{len(pop)}:{h.hexdigest()}"
+    elif stream:
+        src = PopulationStream(space, n, mode=mode, seed=seed,
+                               include_named=list(include_named))
+        pop_tag = src.signature()
+    else:
+        pop = _population(space, n, mode, seed, include_named)
+        named = ",".join(m.name for m in include_named)
+        pop_tag = f"gen:{mode}:{seed}:{n}:[{named}]:{space!r}"
+    v = len(src) if src is not None else len(pop)
     beta_vec = _resolve_beta(pb, beta, beta_machine, include_named, space, be)
-    v = len(pop)
 
-    # Only the jax backend places arrays on a device mesh; the chunked
-    # backends (numpy/pallas) never touch jax device state here, so don't
-    # initialize it just for a label.
-    if be.name == "jax" and mesh is None:
-        import jax
-
+    # ---- mesh: only for backends with a distribution strategy (numpy and
+    # custom backends stay host-chunked and never touch jax device state)
+    distributed = type(be).sharded_stats is not K.Backend.sharded_stats
+    if mesh is None and distributed:
         from repro.launch import mesh as MESH
 
-        ndev = max(1, len(jax.devices()))
-        mesh = MESH.make_mesh((ndev,), ("variants",))
-    default_shards = mesh.size if mesh is not None else 1
-    num_shards = max(1, min(num_shards or default_shards, v))
-    mesh_axis = (f"{mesh.axis_names[0]}={mesh.size} mesh" if mesh is not None
-                 else "host-chunked")
-    bounds = _shard_bounds(v, num_shards)
+        mesh = MESH.make_variant_mesh()
+    mesh_axis = (f"{mesh.axis_names[0]}={mesh.size} mesh"
+                 if mesh is not None and distributed else "host-chunked")
 
-    # ---- statistics pass: (V,) suite means + (A,) best fits, gather-free
-    # ``progress(shard_index, num_shards, lo, hi)`` fires after each shard's
-    # statistics land (serving streams these as shard-by-shard events; a
-    # raising callback aborts the sweep -- the cancellation hook)
-    if be.name == "jax":
-        agg_mean, app_min, app_idx = _jax_sharded_stats(
-            pb, pop, beta_vec, timing_model, clamp, mesh)
-        if progress is not None:
-            progress(0, 1, 0, v)
-    else:
-        agg_mean = np.empty(v, dtype=np.float64)
-        app_min = np.full(len(pb), np.inf)
-        app_idx = np.zeros(len(pb), dtype=np.int64)
-        for s, (lo, hi) in enumerate(bounds):
-            out = be.congruence(pb.arrays(), pop.slice(lo, hi).arrays(),
-                                beta_vec, timing_model=timing_model,
-                                clamp=clamp)
+    default_shards = mesh.size if mesh is not None else 1
+    if src is not None:
+        # streaming exists to bound memory: never let one shard regrow to V
+        default_shards = max(default_shards,
+                             -(-v // STREAM_SHARD_VARIANTS))
+    num_shards = max(1, min(num_shards or default_shards, v))
+    bounds = _shard_bounds(v, num_shards)
+    pad_to = max(hi - lo for lo, hi in bounds)
+
+    def shard_batch(lo: int, hi: int) -> MachineBatch:
+        return src.batch(lo, hi) if src is not None else pop.slice(lo, hi)
+
+    # ---- resumable state: merged per-app best fits + survivor indices
+    app_min = np.full(len(pb), np.inf)
+    app_idx = np.zeros(len(pb), dtype=np.int64)
+    survivors: set = set()
+    start_shard = 0
+    config_sig = None
+    if checkpoint_dir is not None:
+        from repro.checkpoint import store as ckpt
+
+        config_sig = _sweep_signature(pop_tag, v, num_shards, be.name,
+                                      timing_model, clamp, keep_top,
+                                      cost_model, beta_vec)
+        if resume and ckpt.latest_step(checkpoint_dir) is not None:
+            tree_like = {"app_idx": app_idx, "app_min": app_min,
+                         "survivors": np.zeros(0, dtype=np.int64)}
+            state, extra = ckpt.restore(checkpoint_dir, tree_like)
+            if extra.get("config") != config_sig:
+                raise ValueError(
+                    f"checkpoint in {checkpoint_dir!r} was written by a "
+                    "different sweep configuration; refusing to resume "
+                    "(pass resume=False or a fresh checkpoint_dir)")
+            app_min = np.asarray(state["app_min"], dtype=np.float64)
+            app_idx = np.asarray(state["app_idx"], dtype=np.int64)
+            survivors = set(int(i) for i in state["survivors"])
+            start_shard = int(extra["completed_shards"])
+    elif resume:
+        raise ValueError("resume=True requires checkpoint_dir=")
+
+    # ---- statistics pass, shard by shard: each shard is reduced IN PLACE
+    # to per-variant suite means + per-app minima (gather-free on a mesh:
+    # only O(V_shard) + O(A) rows leave the devices), pre-filtered to its
+    # local Pareto candidates, then discarded.
+    # ``progress(shard_index, num_shards, lo, hi)`` fires after each
+    # shard's statistics land (serving streams these as shard-by-shard
+    # events; a raising callback aborts the sweep -- the cancellation
+    # hook; the just-saved checkpoint makes the abort resumable).
+    for s, (lo, hi) in enumerate(bounds):
+        if s < start_shard:
+            continue
+        mb = shard_batch(lo, hi)
+        stats = None
+        if mesh is not None and distributed:
+            stats = be.sharded_stats(pb.arrays(), mb.arrays(), beta_vec,
+                                     mesh, timing_model=timing_model,
+                                     clamp=clamp, pad_to=pad_to)
+        if stats is None:
+            out = be.congruence(pb.arrays(), mb.arrays(), beta_vec,
+                                timing_model=timing_model, clamp=clamp)
             agg = be.to_numpy(out.aggregate)
-            agg_mean[lo:hi] = agg.mean(axis=0)
+            agg_mean_s = agg.mean(axis=0)
             local_idx = np.argmin(agg, axis=1)
             local_min = agg[np.arange(len(pb)), local_idx]
-            better = local_min < app_min
-            app_min = np.where(better, local_min, app_min)
-            app_idx = np.where(better, local_idx + lo, app_idx)
-            if progress is not None:
-                progress(s, num_shards, lo, hi)
+        else:
+            agg_mean_s, local_min, local_idx = stats
+        # strict < keeps the first-occurrence argmin across shards in
+        # index order, matching a single global argmin
+        better = local_min < app_min
+        app_min = np.where(better, local_min, app_min)
+        app_idx = np.where(better, local_idx + lo, app_idx)
 
-    # ---- per-shard Pareto pre-filter, then host-side merge
-    area = np.asarray(cost_model.area(pop))
-    power = np.asarray(cost_model.power(pop))
-    survivors: set = set(int(i) for i in app_idx)
-    for lo, hi in bounds:
-        chunk = slice(lo, hi)
-        a, p2, p3 = area[chunk], power[chunk], agg_mean[chunk]
-        survivors.update(lo + i for i in pareto_front_indices(a, p3))
-        survivors.update(lo + i for i in pareto_front_indices_3d(p3, a, p2))
-        order = np.argsort(p3, kind="stable")[:keep_top]
+        area_s = np.asarray(cost_model.area(mb))
+        power_s = np.asarray(cost_model.power(mb))
+        survivors.update(
+            lo + i for i in pareto_front_indices(area_s, agg_mean_s))
+        survivors.update(
+            lo + i for i in pareto_front_indices_3d(agg_mean_s, area_s,
+                                                    power_s))
+        order = np.argsort(agg_mean_s, kind="stable")[:keep_top]
         survivors.update(int(lo + i) for i in order)
-    candidates = np.array(sorted(survivors), dtype=np.int64)
 
+        if checkpoint_dir is not None:
+            ckpt.save(
+                checkpoint_dir, s + 1,
+                {"app_idx": app_idx, "app_min": app_min,
+                 "survivors": np.array(sorted(survivors), dtype=np.int64)},
+                extra={"config": config_sig, "completed_shards": s + 1,
+                       "num_shards": num_shards, "num_variants": v})
+            ckpt.retain(checkpoint_dir, keep=checkpoint_keep)
+        if progress is not None:
+            progress(s, num_shards, lo, hi)
+
+    # ---- re-score the survivor union into a full (front-complete) result
+    candidate_set = set(survivors)
+    candidate_set.update(int(i) for i in app_idx)
+    candidates = np.array(sorted(candidate_set), dtype=np.int64)
+    cand_batch = (src.take(candidates) if src is not None
+                  else pop.take(candidates))
     result = batched_congruence(
-        pb, pop.take(candidates), beta=beta_vec, timing_model=timing_model,
+        pb, cand_batch, beta=beta_vec, timing_model=timing_model,
         clamp=clamp, backend=be)
+    cand_pos = {int(g): j for j, g in enumerate(candidates)}
     return ShardedSweepResult(
         result=result,
         candidate_indices=candidates,
         num_variants=v,
         num_shards=num_shards,
         mesh_axis=mesh_axis,
-        best_fit_map={app: pop.names[int(app_idx[i])]
+        best_fit_map={app: cand_batch.names[cand_pos[int(app_idx[i])]]
                       for i, app in enumerate(pb.names)},
         cost_model=cost_model,
+        streamed=src is not None,
+        resumed_shards=start_shard,
     )

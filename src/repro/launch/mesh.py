@@ -35,6 +35,19 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
+def make_variant_mesh(num_devices: Optional[int] = None):
+    """1-D ``("variants",)`` mesh over every local device.
+
+    The mega-sweep data layout: the machine-variant axis is embarrassingly
+    parallel (profiles replicated, variants split), so ``shard_sweep``
+    wants all devices on one axis regardless of the production 2-D/3-D
+    topology.  ``Backend.sharded_stats`` consumes this mesh for both the
+    NamedSharding (jax) and shard_map (pallas) distribution strategies.
+    """
+    ndev = int(num_devices or max(1, len(jax.devices())))
+    return make_mesh((ndev,), ("variants",))
+
+
 def use_mesh(mesh):
     """Context manager making ``mesh`` ambient, across jax versions.
 

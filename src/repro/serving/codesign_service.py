@@ -15,8 +15,10 @@ door over the SAME kernels:
     byte-identical to a direct ``run_sweep`` for that request alone
     (pinned in tests/test_serving.py).
   * **Compile/artifact caching** -- populations are cached by
-    (space, n, mode, seed, named-seed) signature so repeat queries skip
-    generation; artifact keys ``(population shape, backend, constraint
+    (space, n, mode, seed, named-seed) signature in a byte-bounded LRU
+    (``pop_cache_bytes``) so repeat queries skip generation without a
+    mega-request pinning unbounded RAM; artifact keys
+    ``(population shape, backend, constraint
     signature)`` are tracked so same-shape queries reuse the backend's
     jitted kernels instead of re-tracing; byte-identical repeat requests
     hit a result memo and skip everything.  Frontier queries warm-start
@@ -151,6 +153,9 @@ class CodesignRequest:
     keep_top: int = 16                  # mega_sweep pre-filter width
     timeout: Optional[float] = None     # seconds, queue wait included
     warm: bool = True                   # frontier: allow cache warm start
+    stream: bool = False                # mega_sweep: regenerate per shard
+    checkpoint_dir: Optional[str] = None  # mega_sweep: resumable state
+    resume: bool = False                # mega_sweep: skip completed shards
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -191,7 +196,8 @@ class CodesignRequest:
         return _sig("memo", self.kind, self.profiles, self.spec,
                     self.machines, self.space, self.include_named,
                     self.beta_machine, self.num_shards, self.keep_top,
-                    self.warm)
+                    self.warm, self.stream, self.checkpoint_dir,
+                    self.resume)
 
 
 @dataclasses.dataclass
@@ -243,7 +249,8 @@ class CodesignService:
     """
 
     def __init__(self, *, workers: int = 2, max_pending: int = 64,
-                 auto_start: bool = True):
+                 auto_start: bool = True,
+                 pop_cache_bytes: int = 256 << 20):
         if max_pending < 1:
             raise ValueError("max_pending must be >= 1")
         self._cond = threading.Condition()
@@ -253,7 +260,13 @@ class CodesignService:
         self._stop = False
         self.max_pending = max_pending
         # caches -----------------------------------------------------------
-        self._populations: Dict[str, MachineBatch] = {}
+        # population cache: LRU bounded by ``pop_cache_bytes`` (a 100M-
+        # variant request must never pin ~7 GB of arrays forever; entries
+        # larger than the whole budget are served but not cached)
+        self._populations: "collections.OrderedDict[str, MachineBatch]" = \
+            collections.OrderedDict()
+        self.pop_cache_bytes = int(pop_cache_bytes)
+        self._pop_bytes = 0
         self._memo: Dict[str, Any] = {}
         self._frontier_state: Dict[str, dict] = {}
         self._artifacts: Dict[str, int] = {}
@@ -500,18 +513,41 @@ class CodesignService:
 
     # -- sweeps ----------------------------------------------------------- #
 
+    @staticmethod
+    def _pop_nbytes(pop: MachineBatch) -> int:
+        from repro.core.sweep import SWEEP_PARAMS
+
+        return (sum(getattr(pop, f).nbytes for f in SWEEP_PARAMS)
+                + sum(len(n) for n in pop.names))
+
     def _population_for(self, space: ParamSpace, n: int, mode: str,
                         seed: int, include_named) -> MachineBatch:
         key = _sig("pop", space, n, mode, seed, include_named)
         with self._cond:
             pop = self._populations.get(key)
             if pop is not None:
+                self._populations.move_to_end(key)
                 self.stats["pop_hits"] += 1
                 return pop
             self.stats["pop_misses"] += 1
         pop = _population(space, n, mode, seed, list(include_named))
         with self._cond:
-            return self._populations.setdefault(key, pop)
+            cached = self._populations.get(key)
+            if cached is not None:  # another worker raced us to it
+                self._populations.move_to_end(key)
+                return cached
+            size = self._pop_nbytes(pop)
+            if size <= self.pop_cache_bytes:
+                self._populations[key] = pop
+                self._pop_bytes += size
+                while (self._pop_bytes > self.pop_cache_bytes
+                       and len(self._populations) > 1):
+                    _, old = self._populations.popitem(last=False)
+                    self._pop_bytes -= self._pop_nbytes(old)
+                    self.stats["pop_evictions"] += 1
+            else:
+                self.stats["pop_uncacheable"] += 1
+            return pop
 
     def _note_artifact(self, kind: str, shape, backend, constraint_sig) -> None:
         """Track the (population shape, backend, constraint signature)
@@ -589,7 +625,7 @@ class CodesignService:
         pb = _as_profile_batch(req.profiles)
         self._note_artifact("mega_sweep", (len(pb), p["n"]), p["backend"],
                             _sig(p["timing_model"], p["clamp"],
-                                 req.num_shards, req.keep_top))
+                                 req.num_shards, req.keep_top, req.stream))
         return shard_sweep(
             pb, space=space, n=p["n"], mode=p["mode"], seed=p["seed"],
             include_named=list(req.include_named), beta=spec.beta,
@@ -597,7 +633,8 @@ class CodesignService:
             clamp=p["clamp"], backend=p["backend"],
             num_shards=req.num_shards, keep_top=req.keep_top,
             cost_model=spec.cost_model or DEFAULT_COST_MODEL,
-            progress=progress)
+            progress=progress, stream=req.stream,
+            checkpoint_dir=req.checkpoint_dir, resume=req.resume)
 
     # -- co-design -------------------------------------------------------- #
 

@@ -1,0 +1,220 @@
+"""Checkpoint store: crash-mid-save atomicity, retention, elastic restore.
+
+``repro.checkpoint.store`` is the durability layer under the resumable
+mega-sweep (``shard_sweep(checkpoint_dir=...)``), so these tests pin the
+properties that resume correctness rests on:
+
+  * a crash at ANY point mid-save leaves the previous checkpoint as the
+    visible latest -- partial ``step_*.tmp`` dirs are never listed, and a
+    retried save of the same step clobbers the stale tmp;
+  * ``restore`` fails loudly on a structure mismatch instead of silently
+    mis-assigning leaves;
+  * ``retain`` garbage-collects oldest-first and never touches tmp dirs;
+  * ``AsyncCheckpointer`` surfaces worker-thread errors on the next call
+    rather than swallowing them;
+  * leaves stored unsharded restore onto a *different* mesh shape
+    (8 -> 4 devices, subprocess with forced host devices) -- the elastic
+    path a resumed sweep uses after losing half its slice.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tree():
+    return {"app_idx": np.arange(4, dtype=np.int64),
+            "app_min": np.linspace(0.1, 0.4, 4),
+            "survivors": np.array([0, 7, 63], dtype=np.int64)}
+
+
+# --------------------------------------------------------------------------- #
+# crash-mid-save atomicity
+# --------------------------------------------------------------------------- #
+
+
+def test_partial_tmp_without_manifest_is_invisible(tmp_path):
+    """Crash after some leaf .npy writes but before the manifest: the tmp
+    dir must not count as a checkpoint and the previous step stays latest."""
+    store.save(str(tmp_path), 1, _tree(), extra={"completed_shards": 1})
+    crashed = tmp_path / "step_00000002.tmp"
+    crashed.mkdir()
+    np.save(crashed / "leaf_00000.npy", np.zeros(3))  # partial write
+    assert store.latest_step(str(tmp_path)) == 1
+    restored, extra = store.restore(str(tmp_path), _tree())
+    assert extra["step"] == 1 and extra["completed_shards"] == 1
+    np.testing.assert_array_equal(restored["app_idx"], _tree()["app_idx"])
+
+
+def test_tmp_with_full_manifest_is_still_invisible(tmp_path):
+    """Crash between manifest write and the atomic rename: even a COMPLETE
+    tmp dir is ignored until the rename commits it."""
+    store.save(str(tmp_path), 3, _tree())
+    final = store.save(str(tmp_path), 4, _tree())
+    os.rename(final, final + ".tmp")  # un-commit step 4
+    assert store.latest_step(str(tmp_path)) == 3
+
+
+def test_retried_save_clobbers_stale_tmp(tmp_path):
+    """A restarted process re-saving the step a crash interrupted must
+    succeed (the stale tmp is removed, not collided with)."""
+    stale = tmp_path / "step_00000002.tmp"
+    stale.mkdir()
+    (stale / "leaf_00000.npy").write_bytes(b"garbage")
+    store.save(str(tmp_path), 2, _tree(), extra={"retry": True})
+    assert store.latest_step(str(tmp_path)) == 2
+    _, extra = store.restore(str(tmp_path), _tree())
+    assert extra["retry"] is True
+    assert not stale.exists()
+
+
+def test_resave_same_step_overwrites(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), 5, t, extra={"gen": 1})
+    t2 = dict(t, app_min=t["app_min"] + 1.0)
+    store.save(str(tmp_path), 5, t2, extra={"gen": 2})
+    restored, extra = store.restore(str(tmp_path), t)
+    assert extra["gen"] == 2
+    np.testing.assert_array_equal(restored["app_min"], t2["app_min"])
+
+
+# --------------------------------------------------------------------------- #
+# restore semantics
+# --------------------------------------------------------------------------- #
+
+
+def test_restore_structure_mismatch_fails_loudly(tmp_path):
+    store.save(str(tmp_path), 1, _tree())
+    with pytest.raises(AssertionError, match="leaves"):
+        store.restore(str(tmp_path), {"only_one": np.zeros(2)})
+
+
+def test_restore_specific_step_and_missing_dir(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), 1, t, extra={"tag": "a"})
+    store.save(str(tmp_path), 2, dict(t, app_min=t["app_min"] * 2),
+               extra={"tag": "b"})
+    _, extra = store.restore(str(tmp_path), t, step=1)
+    assert extra["tag"] == "a" and extra["step"] == 1
+    with pytest.raises(FileNotFoundError, match="no checkpoints"):
+        store.restore(str(tmp_path / "nope"), t)
+
+
+def test_bfloat16_roundtrip(tmp_path):
+    """bf16 leaves ride the uint16-view path and restore bit-exact."""
+    t = {"w": jnp.linspace(-2, 2, 16).astype(jnp.bfloat16)}
+    store.save(str(tmp_path), 1, t)
+    restored, _ = store.restore(str(tmp_path), t)
+    assert np.asarray(restored["w"]).dtype == np.asarray(t["w"]).dtype
+    np.testing.assert_array_equal(
+        np.asarray(restored["w"], np.float32), np.asarray(t["w"], np.float32))
+
+
+def test_retain_keeps_newest_and_ignores_tmp(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        store.save(str(tmp_path), s, t)
+    (tmp_path / "step_00000099.tmp").mkdir()
+    store.retain(str(tmp_path), keep=2)
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004", "step_00000099.tmp"]
+    assert store.latest_step(str(tmp_path)) == 4
+
+
+def test_async_checkpointer_propagates_worker_errors(tmp_path):
+    """The worker thread's failure must surface on the next wait()/save(),
+    not vanish -- a silently-lost checkpoint breaks resume guarantees."""
+    blocker = tmp_path / "occupied"
+    blocker.write_text("not a directory")
+    ck = store.AsyncCheckpointer(str(blocker), keep=2)
+    ck.save(1, {"w": np.ones(2)})
+    with pytest.raises(OSError):
+        ck.wait()
+    # the error is consumed; the checkpointer is reusable afterwards
+    ck.directory = str(tmp_path)
+    ck.save(2, {"w": np.ones(2)})
+    ck.wait()
+    assert store.latest_step(str(tmp_path)) == 2
+
+
+# --------------------------------------------------------------------------- #
+# the mega-sweep customer
+# --------------------------------------------------------------------------- #
+
+
+def test_shard_sweep_checkpoints_are_store_readable(tmp_path):
+    """shard_sweep's per-shard saves go through this store: the latest
+    step equals the shard count, the state tree restores with the
+    documented structure, and retention bounds the directory size."""
+    from repro.core.sweep import shard_sweep
+    from test_sweep import random_profiles
+
+    profiles = random_profiles(3, seed=17)
+    sharded = shard_sweep(profiles, n=64, num_shards=4,
+                          checkpoint_dir=str(tmp_path), checkpoint_keep=2)
+    assert store.latest_step(str(tmp_path)) == 4
+    tree_like = {"app_idx": np.zeros(3, np.int64),
+                 "app_min": np.zeros(3),
+                 "survivors": np.zeros(0, np.int64)}
+    state, extra = store.restore(str(tmp_path), tree_like)
+    assert extra["completed_shards"] == 4
+    assert extra["num_shards"] == 4 and extra["num_variants"] == 64
+    # the final checkpoint's per-app argmins ARE the sweep's best fits
+    for i, app in enumerate(p.name for p in profiles):
+        idx = int(state["app_idx"][i])
+        assert sharded.best_fit_map[app] == sharded.result.machines.names[
+            list(sharded.candidate_indices).index(idx)]
+    steps = [n for n in os.listdir(tmp_path) if n.startswith("step_")]
+    assert len(steps) == 2  # checkpoint_keep pruned shards 1-2
+
+
+def test_elastic_restore_8_to_4_devices():
+    """Sweep state saved under an 8-device variants mesh restores onto a
+    4-device mesh (leaves are stored gathered).  Forced host devices must
+    precede jax import, so this runs in a subprocess."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.checkpoint import store
+        from repro.launch import mesh as MESH
+
+        mesh8 = MESH.make_variant_mesh()
+        assert mesh8.devices.size == 8
+        tree = {"app_min": jnp.linspace(0.1, 0.8, 8),
+                "agg": jnp.arange(64, dtype=jnp.float32)}
+        ref_min = np.asarray(tree["app_min"])
+        sh8 = {"app_min": NamedSharding(mesh8, P("variants")),
+               "agg": NamedSharding(mesh8, P("variants"))}
+        tree = jax.tree.map(jax.device_put, tree, sh8)
+        d = tempfile.mkdtemp()
+        store.save(d, 7, tree, extra={"completed_shards": 7})
+
+        mesh4 = MESH.make_variant_mesh(num_devices=4)
+        sh4 = {"app_min": NamedSharding(mesh4, P("variants")),
+               "agg": NamedSharding(mesh4, P("variants"))}
+        restored, extra = store.restore(d, tree, shardings=sh4)
+        assert extra["step"] == 7 and extra["completed_shards"] == 7
+        np.testing.assert_array_equal(np.asarray(restored["app_min"]),
+                                      ref_min)
+        np.testing.assert_array_equal(np.asarray(restored["agg"]),
+                                      np.arange(64))
+        assert restored["agg"].sharding.mesh.devices.size == 4
+        print("ELASTIC-SWEEP-OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ELASTIC-SWEEP-OK" in out.stdout

@@ -468,3 +468,123 @@ def test_engine_slot_reuse_after_completion(engine_setup):
     eng.submit(second)
     eng.run_to_completion()
     assert second.generated == solo
+
+
+# --------------------------------------------------------------------------- #
+# Bounded population cache (LRU) + streamed / resumable mega-sweeps
+# --------------------------------------------------------------------------- #
+
+
+def _pop_size_bytes():
+    """Bytes one n=32 cached population costs (measured, not assumed)."""
+    probe = CodesignService(auto_start=False)
+    probe.submit(sweep_req("probe"))
+    probe.drain()
+    return probe._pop_bytes
+
+
+def test_population_cache_evicts_lru_under_byte_budget():
+    """The cache is bounded: with room for exactly two populations, a
+    third insert evicts the least-recently-used one, the byte ledger
+    never exceeds the budget, and results are unaffected."""
+    size = _pop_size_bytes()
+    assert size > 0
+    svc = CodesignService(auto_start=False, pop_cache_bytes=2 * size)
+    for seed in (0, 1, 2):   # three same-shape, distinct-seed populations
+        svc.submit(CodesignRequest(kind="sweep", profiles=suite(f"s{seed}"),
+                                   spec=CodesignSpec(n=32, seed=seed)))
+        svc.drain()
+    assert svc.stats["pop_evictions"] == 1
+    assert len(svc._populations) == 2
+    assert svc._pop_bytes <= 2 * size
+    # seed=0 was evicted -> regenerating is a miss; seed=2 is still hot
+    svc.submit(CodesignRequest(kind="sweep", profiles=suite("again0"),
+                               spec=CodesignSpec(n=32, seed=0)))
+    svc.drain()
+    assert svc.stats["pop_misses"] == 4 and svc.stats["pop_hits"] == 0
+    svc.submit(CodesignRequest(kind="sweep", profiles=suite("again2"),
+                               spec=CodesignSpec(n=32, seed=2)))
+    svc.drain()
+    assert svc.stats["pop_hits"] == 1
+
+
+def test_population_cache_serves_oversized_without_caching():
+    svc = CodesignService(auto_start=False, pop_cache_bytes=64)
+    jid = svc.submit(sweep_req("big"))
+    svc.drain()
+    assert svc.stats["pop_uncacheable"] == 1
+    assert len(svc._populations) == 0 and svc._pop_bytes == 0
+    assert_sweep_equal(svc.result(jid, timeout=5),
+                       run_sweep(suite("big"), n=32, seed=0))
+
+
+def test_streamed_mega_sweep_matches_direct_shard_sweep():
+    from repro.core import shard_sweep
+
+    svc = CodesignService(auto_start=False)
+    jid = svc.submit(CodesignRequest(kind="mega_sweep",
+                                     profiles=suite("str"),
+                                     spec=CodesignSpec(n=96, seed=2),
+                                     num_shards=4, stream=True))
+    svc.drain()
+    got = svc.result(jid, timeout=5)
+    assert got.streamed
+    direct = shard_sweep(suite("str"), n=96, seed=2, num_shards=4,
+                         stream=True)
+    assert got.markdown(top_k=8) == direct.markdown(top_k=8)
+    assert got.best_fit_map == direct.best_fit_map
+    np.testing.assert_array_equal(got.result.aggregate,
+                                  direct.result.aggregate)
+    shards = [e for e in svc.stream(jid) if e["event"] == "shard"]
+    assert [s["shard"] for s in shards] == [0, 1, 2, 3]
+    assert shards[-1]["hi"] == 96
+
+
+def test_jax_mega_sweep_per_shard_progress_and_cancel():
+    """Regression (the distributed-stats path used to emit ONE
+    progress(0, 1, 0, V) event): jax-backed mega-sweeps stream one event
+    per shard, so cancellation has real boundaries to land on."""
+    svc = CodesignService(auto_start=False)
+    jid = svc.submit(CodesignRequest(
+        kind="mega_sweep", profiles=suite("jx"),
+        spec=CodesignSpec(n=64, backend="jax"), num_shards=4))
+    svc.drain()
+    shards = [e for e in svc.stream(jid) if e["event"] == "shard"]
+    assert [s["shard"] for s in shards] == [0, 1, 2, 3]
+    assert all(s["num_shards"] == 4 for s in shards)
+    # and a cancelled jax job unwinds at a shard boundary, never hangs
+    jid2 = svc.submit(CodesignRequest(
+        kind="mega_sweep", profiles=suite("jx2"),
+        spec=CodesignSpec(n=64, backend="jax"), num_shards=4))
+    svc._jobs[jid2].cancel_requested = True
+    svc.drain()
+    assert svc.poll(jid2)["state"] == CANCELLED
+    assert sum(e["event"] == "shard" for e in svc.stream(jid2)) <= 1
+
+
+def test_cancelled_checkpointed_mega_sweep_resumes(tmp_path):
+    """Cancellation + checkpoint_dir compose: the aborted job's last
+    completed shard is on disk, and a resume=True resubmission finishes
+    from there with a result identical to an uninterrupted run."""
+    from repro.core import shard_sweep
+
+    ck = str(tmp_path / "ck")
+    kw = dict(kind="mega_sweep", profiles=suite("rs"),
+              spec=CodesignSpec(n=96, seed=4), num_shards=4, stream=True)
+    svc = CodesignService(auto_start=False)
+    jid = svc.submit(CodesignRequest(checkpoint_dir=ck, **kw))
+    svc._jobs[jid].cancel_requested = True   # lands at the first boundary
+    svc.drain()
+    assert svc.poll(jid)["state"] == CANCELLED
+
+    jid2 = svc.submit(CodesignRequest(checkpoint_dir=ck, resume=True, **kw))
+    svc.drain()
+    resumed = svc.result(jid2, timeout=5)
+    assert resumed.resumed_shards == 1       # shard 0 checkpointed pre-abort
+    straight = shard_sweep(suite("rs"), n=96, seed=4, num_shards=4,
+                           stream=True)
+    assert resumed.markdown(top_k=8) == straight.markdown(top_k=8)
+    assert resumed.best_fit_map == straight.best_fit_map
+    # only the remaining shards streamed on the resumed job
+    shards = [e for e in svc.stream(jid2) if e["event"] == "shard"]
+    assert [s["shard"] for s in shards] == [1, 2, 3]

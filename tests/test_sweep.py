@@ -582,3 +582,256 @@ def test_shard_sweep_multidevice_pad_masking():
                           capture_output=True, text=True, timeout=300)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert proc.stdout.startswith("OK 8")
+
+
+# --------------------------------------------------------------------------- #
+# streamed populations + resumable mega-sweeps
+# --------------------------------------------------------------------------- #
+
+
+def _assert_batch_equal(a, b):
+    from repro.core.sweep import SWEEP_PARAMS
+
+    assert a.names == b.names
+    for field in SWEEP_PARAMS:
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field))
+
+
+@pytest.mark.parametrize("mode", ["random", "grid"])
+def test_population_stream_matches_materialized(mode):
+    """Index-addressed regeneration: any batch()/take() of the stream is
+    byte-identical to slicing the materialized population -- the property
+    that makes streamed sweep results exact, not approximate."""
+    from repro.core.sweep import PopulationStream, _population
+
+    space = ParamSpace.default()
+    stream = PopulationStream(space, 200, mode=mode, seed=5,
+                              include_named=VARIANTS)
+    full = _population(space, 200, mode, 5, VARIANTS)
+    assert len(stream) == len(full)
+    _assert_batch_equal(stream.materialize(), full)
+    # shard spanning the named/generated boundary, plus interior shards
+    for lo, hi in [(0, 7), (1, 40), (50, 120), (len(full) - 9, len(full))]:
+        _assert_batch_equal(stream.batch(lo, hi), full.slice(lo, hi))
+    # arbitrary gather mixing named + generated rows (the survivor path)
+    idx = np.array([0, 2, 17, 5, 100, 1, len(full) - 1])
+    _assert_batch_equal(stream.take(idx), full.take(idx))
+
+
+def test_save_load_population_roundtrip(tmp_path):
+    from repro.core.sweep import (PopulationStream, _population,
+                                  load_population, save_population)
+
+    space = ParamSpace.default()
+    full = _population(space, 150, "random", 9, VARIANTS)
+    save_population(str(tmp_path / "pop"), full, shard_size=64)
+    loaded = load_population(str(tmp_path / "pop"))
+    assert len(loaded) == len(full)
+    _assert_batch_equal(loaded.materialize(), full)
+    _assert_batch_equal(loaded.batch(10, 90), full.slice(10, 90))
+    _assert_batch_equal(loaded.take([3, 77, 0, 149]),
+                        full.take([3, 77, 0, 149]))
+    assert loaded.signature().startswith("mmap:")
+    # saving a STREAM (not a batch) never materializes but writes the same
+    stream = PopulationStream(space, 150, seed=9, include_named=VARIANTS)
+    save_population(str(tmp_path / "pop2"), stream, shard_size=32)
+    _assert_batch_equal(load_population(str(tmp_path / "pop2")).materialize(),
+                        full)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_streamed_shard_sweep_byte_identical(backend):
+    """ISSUE acceptance: stream=True changes memory behavior, not results.
+    Candidates, fronts, best fits and aggregates match the materialized
+    shard_sweep AND run_sweep bit for bit."""
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(4, seed=5)
+    kw = dict(n=150, include_named=VARIANTS, backend=backend, num_shards=5)
+    materialized = shard_sweep(profiles, **kw)
+    streamed = shard_sweep(profiles, stream=True, **kw)
+    assert streamed.streamed and not materialized.streamed
+    np.testing.assert_array_equal(streamed.candidate_indices,
+                                  materialized.candidate_indices)
+    assert streamed.result.machines.names == materialized.result.machines.names
+    np.testing.assert_array_equal(streamed.result.aggregate,
+                                  materialized.result.aggregate)
+    assert streamed.pareto_names() == materialized.pareto_names()
+    assert streamed.best_fit_map == materialized.best_fit_map
+    single = run_sweep(profiles, n=150, include_named=VARIANTS,
+                       backend=backend)
+    assert streamed.pareto_names() == [
+        single.machines.names[i] for i in single.pareto_front()]
+    for app in single.apps:
+        assert streamed.best_fit(app) == single.best_fit(app)
+
+
+def test_mmap_population_sweep_matches_generated(tmp_path):
+    from repro.core.sweep import load_population, save_population, shard_sweep
+
+    profiles = random_profiles(3, seed=19)
+    direct = shard_sweep(profiles, n=96, num_shards=3)
+    save_population(str(tmp_path / "pop"),
+                    run_sweep(profiles, n=96).machines)
+    via_mmap = shard_sweep(profiles, population=load_population(
+        str(tmp_path / "pop")), num_shards=3)
+    assert via_mmap.streamed
+    assert via_mmap.pareto_names() == direct.pareto_names()
+    assert via_mmap.best_fit_map == direct.best_fit_map
+    np.testing.assert_array_equal(via_mmap.result.aggregate,
+                                  direct.result.aggregate)
+
+
+def _sharded_equal(a, b):
+    np.testing.assert_array_equal(a.candidate_indices, b.candidate_indices)
+    assert a.result.machines.names == b.result.machines.names
+    np.testing.assert_array_equal(a.result.aggregate, b.result.aggregate)
+    assert a.pareto_names() == b.pareto_names()
+    assert a.best_fit_map == b.best_fit_map
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_resumed_sweep_identical_to_uninterrupted(tmp_path, backend):
+    """ISSUE acceptance: kill after shard k, resume -> byte-identical
+    result, with resumed_shards reporting the skipped prefix."""
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(3, seed=29)
+    kw = dict(n=120, stream=True, num_shards=6, backend=backend,
+              checkpoint_dir=str(tmp_path / "ck"))
+
+    class Kill(Exception):
+        pass
+
+    def die_after_2(s, num_shards, lo, hi):
+        if s >= 2:
+            raise Kill
+
+    with pytest.raises(Kill):
+        shard_sweep(profiles, progress=die_after_2, **kw)
+    events = []
+    resumed = shard_sweep(profiles, resume=True,
+                          progress=lambda s, n_, lo, hi:
+                          events.append(s), **kw)
+    assert resumed.resumed_shards == 3   # shards 0-2 checkpointed pre-raise
+    assert events == [3, 4, 5]           # only the remaining shards ran
+    straight = shard_sweep(profiles, n=120, stream=True, num_shards=6,
+                           backend=backend)
+    assert straight.resumed_shards == 0
+    _sharded_equal(resumed, straight)
+    # markdown/json agree modulo the resume being invisible in the result
+    assert resumed.markdown(top_k=4) == straight.markdown(top_k=4)
+
+
+def test_resume_refuses_config_mismatch(tmp_path):
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(2, seed=3)
+    shard_sweep(profiles, n=64, num_shards=4,
+                checkpoint_dir=str(tmp_path / "ck"))
+    with pytest.raises(ValueError, match="different sweep configuration"):
+        shard_sweep(profiles, n=64, num_shards=4, seed=1, resume=True,
+                    checkpoint_dir=str(tmp_path / "ck"))
+    with pytest.raises(ValueError, match="requires checkpoint_dir"):
+        shard_sweep(profiles, n=64, resume=True)
+
+
+def test_shard_progress_events_all_backends():
+    """Satellite regression: every backend (including the mesh-distributed
+    jax path, which once collapsed to a single progress(0, 1, ...) call)
+    emits one event per shard with covering [lo, hi) bounds."""
+    from repro.core.sweep import shard_sweep
+
+    profiles = random_profiles(2, seed=7)
+    for backend in ("numpy", "jax", "pallas"):
+        events = []
+        shard_sweep(profiles, n=64, num_shards=4, backend=backend,
+                    progress=lambda s, n_, lo, hi:
+                    events.append((s, n_, lo, hi)))
+        assert [e[0] for e in events] == [0, 1, 2, 3], backend
+        assert all(n_ == 4 for _, n_, _lo, _hi in events)
+        assert events[0][2] == 0 and events[-1][3] == 64
+        for (_, _, _, hi), (_, _, lo, _) in zip(events, events[1:]):
+            assert hi == lo
+
+
+def test_pallas_shard_map_multidevice_streamed_resume():
+    """The tentpole end to end on a forced 8-device host: ONE fused
+    pallas_call under shard_map scores each chunk with the variant axis
+    split over the mesh, streamed + resumed, and the result matches the
+    numpy host-chunked reference exactly.  Subprocess because XLA_FLAGS
+    must precede the jax import."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import numpy as np, tempfile
+        from repro.core import VARIANTS, WorkloadProfile, shard_sweep
+
+        apps = [WorkloadProfile(name="app0", flops=2e14, hbm_bytes=1.5e11,
+                                collective_bytes={"all-reduce": 2e10},
+                                num_devices=256, model_flops=5e16),
+                WorkloadProfile(name="app1", flops=8e13, hbm_bytes=4e11,
+                                collective_bytes={"all-gather": 6e10},
+                                num_devices=64, model_flops=1e16)]
+        kw = dict(n=517, stream=True, include_named=VARIANTS, num_shards=4)
+        ref = shard_sweep(apps, backend="numpy", **kw)
+        pal = shard_sweep(apps, backend="pallas", **kw)
+        assert pal.mesh_axis == "variants=8 mesh", pal.mesh_axis
+        assert pal.pareto_names() == ref.pareto_names()
+        assert pal.best_fit_map == ref.best_fit_map
+        np.testing.assert_array_equal(pal.candidate_indices,
+                                      ref.candidate_indices)
+
+        d = tempfile.mkdtemp()
+        class Kill(Exception):
+            pass
+        def die(s, n_, lo, hi):
+            if s >= 1:
+                raise Kill
+        try:
+            shard_sweep(apps, backend="pallas", checkpoint_dir=d,
+                        progress=die, **kw)
+        except Kill:
+            pass
+        resumed = shard_sweep(apps, backend="pallas", checkpoint_dir=d,
+                              resume=True, **kw)
+        assert resumed.resumed_shards == 2
+        assert resumed.pareto_names() == pal.pareto_names()
+        assert resumed.best_fit_map == pal.best_fit_map
+        np.testing.assert_array_equal(resumed.result.aggregate,
+                                      pal.result.aggregate)
+        print("PALLAS-MEGA-OK")
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    env.pop("REPRO_SWEEP_BACKEND", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run([sys.executable, "-c", code], cwd=root, env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "PALLAS-MEGA-OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_streamed_million_variant_sweep():
+    """ISSUE acceptance: V = 1M streams through a single host without the
+    population ever materializing (each shard holds <= 64k variants)."""
+    from repro.core.sweep import STREAM_SHARD_VARIANTS, shard_sweep
+
+    profiles = random_profiles(2, seed=1)
+    events = []
+    sharded = shard_sweep(profiles, n=1_000_000, stream=True,
+                          progress=lambda s, n_, lo, hi:
+                          events.append(hi - lo))
+    assert sharded.streamed
+    assert sharded.num_variants == 1_000_000
+    assert max(events) <= STREAM_SHARD_VARIANTS
+    assert sharded.num_shards == len(events) >= 16
+    assert 0 < len(sharded.result.machines) < 5000
+    assert set(sharded.best_fit_map) == {p.name for p in profiles}
+    front = sharded.pareto_names()
+    assert front and all(isinstance(n, str) for n in front)
