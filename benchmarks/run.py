@@ -116,6 +116,37 @@ def roofline_table() -> None:
                          markdown_table(reports, title=f"mesh {mesh}"))
 
 
+def zoo_calibration() -> None:
+    """Eq.1 batched kernels vs scalar roofline on the model-zoo suites.
+
+    Scores every cached zoo cell through both step-time code paths and
+    reports the per-cell ratio + dominant-term agreement (the measurement
+    anchor for congruence scores).  Smoke mode uses the checked-in
+    zoo-smoke cache; the full run uses ``benchmarks/artifacts/zoo`` when
+    populated (``python -m repro.core.model_zoo``), else falls back to the
+    smoke suite with a note.
+    """
+    from repro.core.model_zoo import calibration_report, resolve_suite
+
+    suite = "zoo-smoke"
+    if not common.SMOKE:
+        try:
+            profiles = resolve_suite("zoo")
+            suite = "zoo"
+        except RuntimeError:
+            profiles = resolve_suite("zoo-smoke")
+    else:
+        profiles = resolve_suite("zoo-smoke")
+    us, report = common.timeit(calibration_report, profiles, TPU_V5E,
+                               repeat=1 if common.SMOKE else 10)
+    common.emit(
+        f"zoo_calibration/{suite}", us,
+        f"cells={len(report.cells)} "
+        f"agreement={report.dominant_agreement:.3f} "
+        f"worst={report.worst_offenders(1)[0].name}")
+    common.write_out("zoo_calibration.md", report.markdown())
+
+
 def profiler_overhead() -> None:
     """Lightweight claim: score-from-artifact vs recompile-per-idealization.
 
@@ -580,6 +611,7 @@ BENCHMARKS = {
     "table1_congruence": table1_congruence,
     "fig3_radar": fig3_radar,
     "roofline_table": roofline_table,
+    "zoo_calibration": zoo_calibration,
     "profiler_overhead": profiler_overhead,
     "perf_hillclimb": perf_hillclimb,
     "sweep_scaling": sweep_scaling,

@@ -39,6 +39,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--mesh", default="pod16x16",
                     help="artifact mesh filter ('' = all meshes)")
+    ap.add_argument("--suite", default=None, metavar="SUITE",
+                    help="score a model-zoo suite instead of the dry-run "
+                         "artifacts: zoo | zoo-smoke, with an optional "
+                         ":scenario (train | serve-prefill | serve-decode), "
+                         "e.g. --suite zoo:train.  zoo-smoke extracts on a "
+                         "cache miss; zoo requires the cache built by "
+                         "`python -m repro.core.model_zoo`")
     ap.add_argument("--mode", choices=("random", "grid"), default="random")
     ap.add_argument("--num", type=int, default=1024,
                     help="population size (grid rounds up per-dim)")
@@ -93,7 +100,17 @@ def main(argv=None) -> int:
         ap.error("--resume requires --checkpoint-dir")
     validate_backend(ap, args.backend)
 
-    profiles, synthetic = common.profiles_or_synthetic(args.mesh)
+    if args.suite:
+        from repro.core.model_zoo import resolve_suite, validate_suite_name
+        try:
+            validate_suite_name(args.suite)
+        except ValueError as exc:
+            ap.error(str(exc))
+        profiles, synthetic = resolve_suite(args.suite), False
+        print(f"suite {args.suite}: {len(profiles)} zoo profiles",
+              file=sys.stderr)
+    else:
+        profiles, synthetic = common.profiles_or_synthetic(args.mesh)
     space = ParamSpace.default(nominal=TPU_V5E, span=args.span,
                                max_links=args.max_links)
     sweep_kwargs = dict(

@@ -30,6 +30,74 @@ SHAPES: Dict[str, ShapeSpec] = {
 }
 
 
+# --- model-zoo grid -------------------------------------------------------
+#
+# The zoo suite (core/model_zoo.py) profiles every registry config under
+# three serving scenarios.  Each scenario maps to a step kind plus a small
+# (seq_len, global_batch) grid; the full grid gives
+# 10 archs x 3 scenarios x 4 shapes = 120 cells, the smoke grid one tiny
+# single-device shape per scenario so the fast CI tier can recompile it.
+
+ZOO_SCENARIOS: Tuple[str, ...] = ("train", "serve-prefill", "serve-decode")
+
+_SCENARIO_KIND: Dict[str, str] = {
+    "train": "train",
+    "serve-prefill": "prefill",
+    "serve-decode": "decode",
+}
+
+_ZOO_GRID: Dict[str, Tuple[Tuple[int, int], ...]] = {
+    # scenario -> ((seq_len, global_batch), ...)
+    "train": ((2_048, 64), (2_048, 256), (8_192, 64), (8_192, 256)),
+    # prefill batches must split across the 16-way pod data axis
+    "serve-prefill": ((4_096, 16), (4_096, 64), (32_768, 16), (32_768, 64)),
+    "serve-decode": ((4_096, 32), (4_096, 256), (32_768, 32), (32_768, 256)),
+}
+
+_ZOO_SMOKE_GRID: Dict[str, Tuple[Tuple[int, int], ...]] = {
+    "train": ((128, 8),),
+    "serve-prefill": ((128, 4),),
+    "serve-decode": ((128, 8),),
+}
+
+
+def scenario_kind(scenario: str) -> str:
+    """Step kind (train|prefill|decode) for a zoo scenario name."""
+    try:
+        return _SCENARIO_KIND[scenario]
+    except KeyError:
+        raise ValueError(
+            f"unknown zoo scenario {scenario!r}; "
+            f"expected one of {sorted(_SCENARIO_KIND)}") from None
+
+
+def zoo_shapes(scenario: str, *, smoke: bool = False) -> Tuple[ShapeSpec, ...]:
+    """ShapeSpecs for one zoo scenario (the batch/seq grid)."""
+    kind = scenario_kind(scenario)
+    grid = (_ZOO_SMOKE_GRID if smoke else _ZOO_GRID)[scenario]
+    prefix = "zoo_smoke" if smoke else "zoo"
+    return tuple(
+        ShapeSpec(f"{prefix}_{kind}_s{seq}_b{batch}", seq, batch, kind)
+        for seq, batch in grid
+    )
+
+
+def resolve_shape(name: str) -> ShapeSpec:
+    """Look up a shape by name across SHAPES and the zoo grids."""
+    if name in SHAPES:
+        return SHAPES[name]
+    for smoke in (False, True):
+        for scenario in ZOO_SCENARIOS:
+            for shape in zoo_shapes(scenario, smoke=smoke):
+                if shape.name == name:
+                    return shape
+    known = sorted(SHAPES) + [
+        s.name for sc in ZOO_SCENARIOS
+        for smoke in (False, True) for s in zoo_shapes(sc, smoke=smoke)
+    ]
+    raise KeyError(f"unknown shape {name!r}; known: {', '.join(known)}")
+
+
 def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, Optional[str]]:
     """Whether this (arch, shape) cell is runnable, else the skip reason."""
     if shape.name == "long_500k" and not cfg.supports_long_context:

@@ -22,6 +22,12 @@ Public API:
                                               accepted by every co-design
                                               entry point and the serving
                                               front door
+  model_zoo.profiles_from_configs          -- registry configs x scenarios
+                                              -> measured WorkloadProfile
+                                              suites ("zoo"/"zoo-smoke"),
+                                              cached as JSON artifacts
+  model_zoo.calibration_report             -- Eq.1 kernels vs roofline
+                                              step-time cross-check
 
 See docs/architecture.md for the layer map and docs/backends.md for the
 backend-authoring contract.
@@ -57,6 +63,15 @@ from repro.core.kernels_xp import (
     get_backend,
     register_backend,
     validate_backend_name,
+)
+from repro.core.model_zoo import (
+    CalibrationReport,
+    ZooCell,
+    calibration_report,
+    profiles_from_configs,
+    resolve_suite,
+    validate_suite_name,
+    zoo_cells,
 )
 from repro.core.spec import CodesignSpec, resolve_spec
 from repro.core.machine import (

@@ -46,7 +46,36 @@ class RooflineReport:
     peak_memory_gb: float
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        """Strict-JSON-safe dict (inverse: ``from_dict``).
+
+        Zero-rate machines and zero-FLOP cells produce inf/nan terms;
+        ``json.dump(..., allow_nan=False)`` rejects those and the default
+        ``Infinity``/``NaN`` spellings are not valid JSON anyway.  Non-finite
+        floats are encoded as the strings ``"inf"`` / ``"-inf"`` / ``"nan"``,
+        which ``from_dict`` turns back into the exact float values.
+        """
+        out = {}
+        for key, value in dataclasses.asdict(self).items():
+            if isinstance(value, float) and not math.isfinite(value):
+                value = str(value)  # "inf" | "-inf" | "nan"
+            out[key] = value
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RooflineReport":
+        """Rebuild a report from ``as_dict`` output (round-trip pinned in
+        tests/test_model_zoo.py)."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown RooflineReport fields {sorted(unknown)}")
+        kw = {}
+        for f in dataclasses.fields(cls):
+            value = d[f.name]
+            if f.type == "float" and isinstance(value, str):
+                value = float(value)
+            kw[f.name] = value
+        return cls(**kw)
 
     def one_liner(self) -> str:
         return (

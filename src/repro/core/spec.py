@@ -88,6 +88,8 @@ class CodesignSpec:
     n: Optional[int] = None
     sweep_mode: Optional[str] = None
     seed: Optional[int] = None
+    # ---- workload suite -------------------------------------------------
+    suite: Optional[str] = None                 # zoo[-smoke][:scenario]
 
     # ------------------------------------------------------------------ #
 
@@ -101,7 +103,9 @@ class CodesignSpec:
         """
         from repro.core.constrained import validate_area_envelope
         from repro.core.frontier import _validate_budget_schedule
+        from repro.core.model_zoo import validate_suite_name
 
+        validate_suite_name(self.suite)
         envelope = validate_area_envelope(self.area_envelope)
         budgets: Optional[Tuple[float, ...]] = None
         if self.budgets is not None:

@@ -491,6 +491,12 @@ class ProfileBatch:
 
 
 def _as_profile_batch(profiles) -> ProfileBatch:
+    if isinstance(profiles, str):
+        # Suite name ("zoo", "zoo-smoke:train", ...): every entry point
+        # that packs profiles accepts the model-zoo suites by name.
+        from repro.core.model_zoo import resolve_suite
+
+        profiles = resolve_suite(profiles)
     if isinstance(profiles, ProfileBatch):
         return profiles
     return ProfileBatch.from_profiles(list(profiles))

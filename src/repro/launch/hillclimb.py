@@ -1,5 +1,8 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+from repro.launch import xla_flags
+
+xla_flags.request_host_devices(512)
 
 """Hillclimb tooling: measured substitution of the Pallas flash-attention
 kernel into a dry-run profile.
@@ -61,14 +64,14 @@ import numpy as np
 import jax
 
 from repro import configs as C
-from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.configs.shapes import ShapeSpec, resolve_shape
 from repro.core import costs as CO
 from repro.core import machine as M
 from repro.core import roofline as R
 from repro.distributed import ctx as CTX
 from repro.distributed import sharding as SH
 from repro.launch import mesh as MESH
-from repro.launch.dryrun import (
+from repro.launch.extract import (
     _cost_dict,
     _probe_cfg,
     default_variant,
@@ -395,8 +398,9 @@ def main(argv=None) -> int:
     cfg = C.get_config(args.arch, smoke=args.smoke)
     if args.moe_impl and cfg.moe is not None:
         cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, impl=args.moe_impl))
-    shape = SHAPES[args.shape]
+    shape = resolve_shape(args.shape)  # assigned SHAPES or a zoo-grid shape
     multi_pod = args.mesh == "multipod"
+    xla_flags.ensure_host_device_count(512 if multi_pod else 256)
     mesh = MESH.make_production_mesh(multi_pod=multi_pod)
     mesh_label = "pods2x16x16" if multi_pod else "pod16x16"
     variant = args.variant or default_variant(cfg)

@@ -1,0 +1,65 @@
+"""XLA_FLAGS plumbing for fake-host-device dry runs.
+
+jax parses ``XLA_FLAGS`` once, when the backend first initializes, and the
+device count is locked from then on.  The dry-run launchers need
+``--xla_force_host_platform_device_count=N`` exported before that happens;
+historically they *overwrote* ``XLA_FLAGS``, silently dropping any flags the
+caller had exported.  ``request_host_devices`` appends instead, and
+``ensure_host_device_count`` turns the late-import failure mode (jax already
+initialized with too few devices -> cryptic mesh errors) into a loud,
+actionable RuntimeError.
+
+This module must stay importable without jax side effects: it only touches
+``os.environ``; jax is imported lazily inside ``ensure_host_device_count``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional
+
+HOST_PLATFORM_FLAG = "--xla_force_host_platform_device_count"
+
+_FLAG_RE = re.compile(re.escape(HOST_PLATFORM_FLAG) + r"=(\d+)")
+
+
+def requested_host_devices() -> Optional[int]:
+    """Host-device count currently requested via XLA_FLAGS, if any."""
+    m = _FLAG_RE.search(os.environ.get("XLA_FLAGS", ""))
+    return int(m.group(1)) if m else None
+
+
+def request_host_devices(n: int) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS.
+
+    Pre-existing flags are preserved (append, never overwrite).  If a
+    host-platform count is already present it wins, whatever its value:
+    jax has possibly initialized under it already, and two copies of the
+    flag would be ambiguous.  Call ``ensure_host_device_count`` afterwards
+    to verify the count actually in effect.
+    """
+    if requested_host_devices() is not None:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    flag = f"{HOST_PLATFORM_FLAG}={int(n)}"
+    os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+
+
+def ensure_host_device_count(n: int) -> None:
+    """Fail loudly unless jax sees at least ``n`` devices.
+
+    Calling this initializes jax's backend if it was not initialized yet,
+    so call it only after ``request_host_devices``.
+    """
+    import jax
+
+    have = jax.device_count()
+    if have < int(n):
+        raise RuntimeError(
+            f"this run needs {n} devices but jax initialized with {have} "
+            f"(XLA_FLAGS={os.environ.get('XLA_FLAGS', '')!r}). jax locks "
+            f"the device count at first use; export "
+            f"{HOST_PLATFORM_FLAG}={n} (or import the launcher) before "
+            f"anything touches jax devices in this process."
+        )

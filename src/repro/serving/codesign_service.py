@@ -140,6 +140,12 @@ class CodesignRequest:
     the frontier schedule, descent knobs and the backend.  ``machines``
     (co-design kinds) defaults to the paper's named variants; ``space``
     (sweep kinds) defaults to ``ParamSpace.default()``.
+
+    ``profiles`` may be a model-zoo suite name (``"zoo"``,
+    ``"zoo-smoke:train"``, ...) -- or ``None``, in which case
+    ``spec.suite`` must name the suite (validated by the ONE
+    ``CodesignSpec.validate`` path); either way the name is resolved
+    against the zoo cache at execution time by ``_as_profile_batch``.
     """
 
     kind: str
@@ -162,6 +168,12 @@ class CodesignRequest:
             raise ValueError(f"unknown request kind {self.kind!r}; "
                              f"have {KINDS}")
         self.spec.validate()
+        if self.profiles is None:
+            if self.spec.suite is None:
+                raise ValueError(
+                    "profiles is required unless spec.suite names a "
+                    "model-zoo suite (e.g. CodesignSpec(suite='zoo-smoke'))")
+            self.profiles = self.spec.suite
 
     # -- resolved sweep parameters (spec field > historical default) ----- #
 
