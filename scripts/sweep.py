@@ -45,7 +45,13 @@ def main(argv=None) -> int:
                          ":scenario (train | serve-prefill | serve-decode), "
                          "e.g. --suite zoo:train.  zoo-smoke extracts on a "
                          "cache miss; zoo requires the cache built by "
-                         "`python -m repro.core.model_zoo`")
+                         "`python -m repro.core.model_zoo`; generated "
+                         "suites gen:<count>[:seed=S][:mode=halton|rng] "
+                         "are accepted too")
+    ap.add_argument("--gen", type=int, default=None, metavar="N",
+                    help="score N generated stress workloads "
+                         "(shorthand for --suite gen:N; AppSpace.default "
+                         "sampled by Halton indices, seed 0)")
     ap.add_argument("--mode", choices=("random", "grid"), default="random")
     ap.add_argument("--num", type=int, default=1024,
                     help="population size (grid rounds up per-dim)")
@@ -99,6 +105,12 @@ def main(argv=None) -> int:
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")
     validate_backend(ap, args.backend)
+    if args.gen is not None:
+        if args.suite:
+            ap.error("--gen and --suite are mutually exclusive")
+        if args.gen < 1:
+            ap.error("--gen must be >= 1")
+        args.suite = f"gen:{args.gen}"
 
     if args.suite:
         from repro.core.model_zoo import resolve_suite, validate_suite_name
@@ -107,7 +119,7 @@ def main(argv=None) -> int:
         except ValueError as exc:
             ap.error(str(exc))
         profiles, synthetic = resolve_suite(args.suite), False
-        print(f"suite {args.suite}: {len(profiles)} zoo profiles",
+        print(f"suite {args.suite}: {len(profiles)} profiles",
               file=sys.stderr)
     else:
         profiles, synthetic = common.profiles_or_synthetic(args.mesh)

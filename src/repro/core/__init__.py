@@ -18,6 +18,12 @@ Public API:
   constrained.joint_codesign               -- joint machine+sharding descent
   frontier.frontier_codesign               -- J*(budget) feasibility frontier
                                               by warm-started continuation
+  genload.AppSpace                         -- generated-workload stress
+                                              populations ("gen:<n>" suites,
+                                              index-addressed sampling)
+  packing.pack_codesign                    -- multi-tenant packing: A apps
+                                              across M machine instances
+                                              under fleet budgets
   spec.CodesignSpec                        -- one validated request object
                                               accepted by every co-design
                                               entry point and the serving
@@ -41,6 +47,14 @@ from repro.core.constrained import (
     validate_area_envelope,
 )
 from repro.core.frontier import FrontierResult, frontier_codesign
+from repro.core.genload import (
+    APP_PARAMS,
+    AppSpace,
+    is_gen_suite,
+    parse_gen_suite,
+    resolve_gen_suite,
+)
+from repro.core.packing import PackingResult, fleet_objective, pack_codesign
 from repro.core.congruence import (
     CongruenceReport,
     SCORE_NAMES,

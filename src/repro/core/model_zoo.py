@@ -291,7 +291,8 @@ def parse_suite(suite: str) -> Tuple[bool, Optional[str]]:
         raise ValueError(
             f"unknown suite {suite!r}; expected "
             f"{' | '.join(SUITE_BASES)} with an optional "
-            f":scenario of {ZOO_SCENARIOS}")
+            f":scenario of {ZOO_SCENARIOS}, or a generated suite "
+            f"gen:<count>[:seed=<int>][:mode=halton|rng]")
     if sep and scenario not in ZOO_SCENARIOS:
         raise ValueError(
             f"unknown zoo scenario {scenario!r} in suite {suite!r}; "
@@ -300,8 +301,18 @@ def parse_suite(suite: str) -> Tuple[bool, Optional[str]]:
 
 
 def validate_suite_name(suite: Optional[str]) -> None:
-    """Shared validation hook (``CodesignSpec.validate`` and CLIs)."""
-    if suite is not None:
+    """Shared validation hook (``CodesignSpec.validate`` and CLIs).
+
+    Dispatches between the zoo grammar and the generated-suite grammar
+    (``repro.core.genload``) so every caller of the ONE validation path
+    accepts ``gen:<count>`` suites for free.
+    """
+    if suite is None:
+        return
+    from repro.core.genload import is_gen_suite, parse_gen_suite
+    if is_gen_suite(suite):
+        parse_gen_suite(suite)
+    else:
         parse_suite(suite)
 
 
@@ -316,8 +327,13 @@ def resolve_suite(
     Smoke suites extract on a cache miss (tiny configs, seconds each);
     full suites are cache-only by default -- a missing artifact raises
     with the regeneration command rather than starting a multi-minute
-    pod-mesh compile inside a sweep.
+    pod-mesh compile inside a sweep.  Generated suites (``gen:<count>``,
+    see ``repro.core.genload``) regenerate deterministically from the
+    suite string alone and never touch the cache.
     """
+    from repro.core.genload import is_gen_suite, resolve_gen_suite
+    if is_gen_suite(suite):
+        return resolve_gen_suite(suite)
     smoke, scenario = parse_suite(suite)
     if extract_missing is None:
         extract_missing = smoke

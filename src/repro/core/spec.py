@@ -88,8 +88,10 @@ class CodesignSpec:
     n: Optional[int] = None
     sweep_mode: Optional[str] = None
     seed: Optional[int] = None
+    # ---- multi-tenant packing ------------------------------------------
+    num_machines: Optional[int] = None          # pack_codesign fleet size
     # ---- workload suite -------------------------------------------------
-    suite: Optional[str] = None                 # zoo[-smoke][:scenario]
+    suite: Optional[str] = None      # zoo[-smoke][:scenario] | gen:<count>
 
     # ------------------------------------------------------------------ #
 
@@ -126,7 +128,7 @@ class CodesignSpec:
         if self.sweep_mode is not None and self.sweep_mode not in SWEEP_MODES:
             raise ValueError(f"unknown sweep_mode {self.sweep_mode!r}; "
                              f"have {SWEEP_MODES}")
-        for name in ("steps", "refine_steps", "n"):
+        for name in ("steps", "refine_steps", "n", "num_machines"):
             value = getattr(self, name)
             if value is not None and not int(value) > 0:
                 raise ValueError(f"{name} must be positive, got {value!r}")

@@ -203,6 +203,29 @@ class ParamSpace:
         }
         return ParamSpace(dims=dims, nominal=nominal)
 
+    @staticmethod
+    def scale_space(nominal: MachineModel = TPU_V5E, span: float = 4.0,
+                    max_links: int = 8, scale_span: float = 4.0
+                    ) -> "ParamSpace":
+        """``default()`` plus the per-subsystem idealization scales as
+        swept dimensions (``scale_span``x below/above 1.0) -- the
+        stress-test preset that exercises every ``SWEEP_PARAMS`` column
+        at once, promoted from the test suite's local helper per the
+        ROADMAP's generated-workload item.
+
+        >>> space = ParamSpace.scale_space(scale_span=2.0)
+        >>> sorted(space.dims) == sorted(SWEEP_PARAMS)
+        True
+        >>> space.dims["scale_compute"].lo
+        0.5
+        """
+        space = ParamSpace.default(nominal=nominal, span=span,
+                                   max_links=max_links)
+        dims = dict(space.dims)
+        for name in ("scale_compute", "scale_memory", "scale_interconnect"):
+            dims[name] = Dim(1.0 / scale_span, scale_span)
+        return ParamSpace(dims=dims, nominal=nominal)
+
     # ------------------------------------------------------------------ #
 
     def _nominal_value(self, name: str) -> float:

@@ -51,6 +51,10 @@ Co-design modes (after the kernel substitution):
                  per-subsystem area envelopes (e.g. peak_flops=1.5,
                  hbm_bw=0.8) added as one constraint per entry to --grad
                  descent or to every --budget-sweep point.
+  --pack M       multi-tenant packing: place the optimized profile plus
+                 --pack-gen generated co-tenant workloads across M
+                 machine instances (repro.core.packing); scalar budgets
+                 read as fleet TOTALS in this mode.
 """
 
 import argparse
@@ -238,6 +242,25 @@ def codesign_joint(profile_group, steps: int, lr: float = 0.1,
     return res.to_json()
 
 
+def codesign_pack(profile, num_machines: int, gen: int = 31,
+                  lr: float = None, area_budget: float = None,
+                  power_budget: float = None, area_envelope: dict = None):
+    """Multi-tenant packing: place the optimized profile plus ``gen``
+    generated co-tenant stress workloads across ``num_machines`` machine
+    instances (``repro.core.packing.pack_codesign``).  Scalar budgets
+    read as fleet TOTALS here, not per-machine caps -- the question is
+    "how should a shared fleet split its silicon across tenants?"."""
+    from repro.core.model_zoo import resolve_suite
+    from repro.core.packing import pack_codesign
+    from repro.core.sweep import MachineBatch
+
+    apps = [profile] + (resolve_suite(f"gen:{gen}") if gen > 0 else [])
+    return pack_codesign(apps, MachineBatch.from_models(M.VARIANTS),
+                         num_machines=num_machines, lr=lr,
+                         area_budget=area_budget, power_budget=power_budget,
+                         area_envelope=area_envelope)
+
+
 def attention_layers(cfg) -> int:
     if cfg.family == Family.HYBRID:
         from repro.models.transformer import hybrid_layout
@@ -304,14 +327,24 @@ def validate_codesign_args(parser, args) -> None:
             parser.error(f"{name} must be positive, got {value}")
     budget_sweep = getattr(args, "budget_sweep", None)
     envelope = getattr(args, "area_envelope", None)
+    pack = getattr(args, "pack", 0) or 0
+    if pack < 0 or getattr(args, "pack_gen", 0) < 0:
+        parser.error("--pack/--pack-gen must be non-negative")
     has_budget = (args.area_budget is not None
                   or args.power_budget is not None or envelope is not None)
-    if (has_budget or args.joint or args.opt_links
+    if (args.joint or args.opt_links
             or args.constraint_mode or budget_sweep is not None) \
             and not args.grad:
-        parser.error("--area-budget/--power-budget/--area-envelope/"
-                     "--constraint-mode/--opt-links/--joint/--budget-sweep "
+        parser.error("--constraint-mode/--opt-links/--joint/--budget-sweep "
                      "require --grad STEPS")
+    if has_budget and not args.grad and not pack:
+        parser.error("--area-budget/--power-budget/--area-envelope "
+                     "require --grad STEPS or --pack M")
+    if pack and (args.grad or args.joint or budget_sweep is not None
+                 or args.opt_links or args.constraint_mode):
+        parser.error("--pack is its own co-design mode (fleet-total "
+                     "budgets); drop --grad/--joint/--budget-sweep/"
+                     "--opt-links/--constraint-mode")
     if (args.constraint_mode or args.opt_links) \
             and not has_budget and budget_sweep is None:
         parser.error("--constraint-mode/--opt-links require "
@@ -386,6 +419,16 @@ def main(argv=None) -> int:
                     help="per-subsystem area envelopes for --grad / "
                          "--budget-sweep, e.g. peak_flops=1.5,hbm_bw=0.8 "
                          "(keys from repro.core.costmodel.RATE_FIELDS)")
+    ap.add_argument("--pack", type=int, default=0, metavar="M",
+                    help="multi-tenant packing: place the optimized "
+                         "profile plus --pack-gen generated co-tenants "
+                         "across M machine instances "
+                         "(repro.core.packing); --area-budget/"
+                         "--power-budget read as fleet TOTALS")
+    ap.add_argument("--pack-gen", type=int, default=31, metavar="N",
+                    help="generated co-tenant workloads for --pack "
+                         "(AppSpace.default Halton suite gen:N; 0 packs "
+                         "the substituted profile alone)")
     args = ap.parse_args(argv)
     # Fail at parse time with the registry's current contents, not deep
     # inside get_backend() after minutes of compile work.
@@ -515,6 +558,21 @@ def main(argv=None) -> int:
                       f"area_budget={feas['area_budget']} "
                       f"power_budget={feas['power_budget']} "
                       f"all_feasible={feas['all_feasible']}")
+
+    if args.pack > 0:
+        # Multi-tenant packing: how should a shared fleet split its
+        # silicon across this workload and a generated stress population?
+        pk = codesign_pack(profile, args.pack, gen=args.pack_gen,
+                           lr=args.grad_lr, area_budget=args.area_budget,
+                           power_budget=args.power_budget,
+                           area_envelope=envelope)
+        profile.meta["pack_codesign"] = pk.to_json(top_k=8)
+        feas = ("" if pk.feasible is None
+                else f", feasible={bool(pk.feasible)}")
+        print(f"pack codesign: {len(pk.app_names)} apps across "
+              f"{len(pk.machine_names)} machines ({pk.mode}): objective "
+              f"{pk.objective_seed:.4f} -> {pk.objective_final:.4f}, "
+              f"fleet area {pk.area_total:.3f}{feas}")
 
     if args.out:
         os.makedirs(args.out, exist_ok=True)

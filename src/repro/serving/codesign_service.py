@@ -67,7 +67,7 @@ from repro.core.sweep import (
 )
 
 #: Request kinds and the library entry point each one fronts.
-KINDS = ("sweep", "mega_sweep", "constrained", "joint", "frontier")
+KINDS = ("sweep", "mega_sweep", "constrained", "joint", "frontier", "pack")
 
 #: Job lifecycle states (terminal: done/error/cancelled/timeout/rejected).
 PENDING, RUNNING = "pending", "running"
@@ -495,6 +495,7 @@ class CodesignService:
                 "constrained": self._run_constrained,
                 "joint": self._run_joint,
                 "frontier": self._run_frontier,
+                "pack": self._run_pack,
             }[req.kind]
             result = runner(job)
         except BaseException as exc:      # noqa: BLE001 -- jobs never crash workers
@@ -676,6 +677,20 @@ class CodesignService:
         self._note_artifact("joint", (len(seeds),), "jax",
                             self._constraint_sig(req.spec))
         return joint_codesign(req.profiles, seeds, spec=req.spec)
+
+    def _run_pack(self, job: Job):
+        from repro.core.packing import pack_codesign
+
+        req = job.request
+        seeds = self._seeds(req)
+        spec = req.spec
+        self._note_artifact(
+            "pack", (len(seeds), spec.num_machines or 4), "jax",
+            self._constraint_sig(spec))
+        # ``PackingResult`` joins the response path purely through the
+        # uniform markdown/to_json protocol -- render_result needs no
+        # isinstance knowledge of it.
+        return pack_codesign(req.profiles, seeds, spec=spec)
 
     def _run_frontier(self, job: Job):
         from repro.core.frontier import frontier_codesign

@@ -1,0 +1,111 @@
+"""Shared test plumbing: the hypothesis-with-fallback property shims.
+
+Tier-1 must pass without the ``dev`` extra (pyproject declares hypothesis
+there, not in the core deps), so every property test runs through one of
+the two shims defined here instead of importing hypothesis directly:
+
+  ``hypothesis_shim(seed, trials)`` -> the ``(given, settings, st)``
+      triple a test module would import from hypothesis.  With hypothesis
+      installed these ARE the real decorators (``seed``/``trials`` are
+      ignored -- hypothesis manages its own examples); without it the
+      same property bodies run over both range endpoints plus seeded
+      uniform draws, ``trials`` calls total.
+
+  ``floats_property(n_examples, seed, **ranges)`` -> a decorator mapping
+      argument names to ``(lo, hi)`` float bounds; a real ``@given``
+      property under hypothesis, a seeded numpy loop otherwise.
+
+Keeping the fallback in ONE place (it used to be copied into four test
+modules) means the trial-0/trial-1 endpoint convention and the
+no-functools.wraps pytest workaround cannot drift between files.
+"""
+
+import numpy as np
+
+try:
+    from hypothesis import given as _h_given
+    from hypothesis import settings as _h_settings
+    from hypothesis import strategies as _h_st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal images
+    HAVE_HYPOTHESIS = False
+
+
+def hypothesis_shim(seed, trials):
+    """The ``(given, settings, st)`` triple for one test module.
+
+    ``seed`` keeps each module's fallback draws distinct (and stable
+    across runs); ``trials`` sizes the fallback loop -- modules whose
+    property bodies run full jax descents use far fewer trials than the
+    pure-numpy ones.  Trial 0 pins every argument to its lower bound and
+    trial 1 to its upper bound, so range endpoints are always exercised.
+    """
+    if HAVE_HYPOTHESIS:
+        return _h_given, _h_settings, _h_st
+
+    import random as _random
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        floats = _Floats
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**strategies):
+        def deco(fn):
+            # No functools.wraps: copying __wrapped__ would make pytest see
+            # the inner signature and demand fixtures for every argument.
+            def runner():
+                rng = _random.Random(seed)
+                for trial in range(trials):
+                    kwargs = {}
+                    for name in sorted(strategies):
+                        s = strategies[name]
+                        if trial == 0:
+                            kwargs[name] = s.lo
+                        elif trial == 1:
+                            kwargs[name] = s.hi
+                        else:
+                            kwargs[name] = s.lo + (s.hi - s.lo) * rng.random()
+                    fn(**kwargs)
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+    return given, settings, st
+
+
+def floats_property(n_examples=150, seed=20260808, **ranges):
+    """``@given`` with float ranges, or a seeded-loop fallback.
+
+    ``ranges`` maps argument names to ``(lo, hi)`` bounds.  With
+    hypothesis installed the test becomes a ``@given`` property; without
+    it the same predicate runs over ``n_examples`` deterministic uniform
+    draws.
+    """
+
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            strats = {k: _h_st.floats(min_value=lo, max_value=hi,
+                                      allow_nan=False, allow_infinity=False)
+                      for k, (lo, hi) in ranges.items()}
+            return _h_settings(max_examples=n_examples,
+                               deadline=None)(_h_given(**strats)(fn))
+
+        def runner():
+            rng = np.random.default_rng(seed)
+            for _ in range(n_examples):
+                fn(**{k: float(rng.uniform(lo, hi))
+                      for k, (lo, hi) in ranges.items()})
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

@@ -10,10 +10,15 @@ Pinned equivalence tolerances:
     the same tiling and f32 math the TPU compile sees.
 """
 
+import dataclasses
 import os
 
 import numpy as np
 import pytest
+
+from conftest import hypothesis_shim
+
+given, settings, st = hypothesis_shim(seed=0xD1FF, trials=12)
 
 from repro.core import (
     CostModel,
@@ -253,6 +258,95 @@ def test_pallas_interpret_env_override(monkeypatch):
     monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
     # explicit argument always wins
     assert PallasBackend(interpret=True).interpret
+
+
+# --------------------------------------------------------------------------- #
+# adversarial cross-backend differential fuzz
+# --------------------------------------------------------------------------- #
+
+
+def _fuzz_profile(name, flops, hbm, coll, nd=64, model_flops=None):
+    from repro.core import WorkloadProfile
+
+    return WorkloadProfile(
+        name=name, flops=flops, hbm_bytes=hbm, bytes_accessed=hbm,
+        collective_bytes={"all-reduce": coll}, num_devices=nd,
+        model_flops=(0.5 * flops * nd if model_flops is None
+                     else model_flops))
+
+
+def _assert_backends_agree(profiles, machines, beta=None):
+    res_n = batched_congruence(profiles, machines, beta=beta, clamp=True,
+                               backend="numpy")
+    res_j = batched_congruence(profiles, machines, beta=beta, clamp=True,
+                               backend="jax")
+    res_p = batched_congruence(profiles, machines, beta=beta, clamp=True,
+                               backend="pallas")
+    for res in (res_n, res_j, res_p):
+        assert np.isfinite(res.aggregate).all(), res.backend
+        assert np.isfinite(res.beta).all() and np.isfinite(res.gamma).all()
+    np.testing.assert_allclose(res_j.aggregate, res_n.aggregate,
+                               rtol=JAX_RTOL, atol=JAX_RTOL)
+    np.testing.assert_allclose(res_p.aggregate, res_n.aggregate,
+                               rtol=PALLAS_RTOL, atol=PALLAS_RTOL)
+
+
+@given(
+    flops=st.floats(1e6, 1e16),
+    intensity=st.floats(1.0, 4096.0),
+    coll_frac=st.floats(0.0, 1.0),
+    rate_scale=st.floats(1e-3, 1e3),
+    beta=st.floats(1e-4, 1e3),
+)
+@settings(max_examples=24, deadline=None)
+def test_backends_agree_on_fuzzed_cells(flops, intensity, coll_frac,
+                                        rate_scale, beta):
+    """Differential fuzz: numpy == jax to 1e-6 and numpy == pallas to
+    5e-4 must hold across the whole (workload x machine x beta) knob
+    space, not just the curated suites -- ten decades of FLOPs, rates
+    scaled 1e-3..1e3x off nominal, betas from microseconds to ks."""
+    prof = _fuzz_profile("fuzz", flops, flops / intensity,
+                         coll_frac * flops / intensity)
+    machines = MachineBatch.from_models([
+        TPU_V5E,
+        dataclasses.replace(TPU_V5E,
+                            peak_flops=TPU_V5E.peak_flops * rate_scale),
+        dataclasses.replace(TPU_V5E, hbm_bw=TPU_V5E.hbm_bw * rate_scale),
+        dataclasses.replace(TPU_V5E, ici_bw=TPU_V5E.ici_bw * rate_scale),
+    ])
+    _assert_backends_agree([prof], machines, beta=beta)
+
+
+def test_backends_agree_on_degenerate_cells():
+    """Deterministic adversarial pins: zero-FLOP and zero-collective
+    apps, near-zero and huge machine rates, extreme betas.  Every
+    backend must return finite clamped scores and agree."""
+    profiles = [
+        _fuzz_profile("zero-flop", 0.0, 1e9, 1e8, nd=8, model_flops=0.0),
+        _fuzz_profile("zero-coll", 1e12, 1e9, 0.0, nd=8),
+        _fuzz_profile("tiny", 1.0, 1.0, 0.0, nd=8, model_flops=0.5),
+        _fuzz_profile("hbm-bound", 1e9, 1e12, 1e10, nd=8),
+    ]
+    machines = MachineBatch.from_models([
+        TPU_V5E,
+        dataclasses.replace(TPU_V5E,
+                            peak_flops=TPU_V5E.peak_flops * 1e-6),
+        dataclasses.replace(TPU_V5E, hbm_bw=TPU_V5E.hbm_bw * 1e6),
+        dataclasses.replace(TPU_V5E, ici_bw=TPU_V5E.ici_bw * 1e-6,
+                            inter_pod_bw=TPU_V5E.inter_pod_bw * 1e-6),
+    ])
+    for beta in (None, 1e-6, 1e3):
+        _assert_backends_agree(profiles, machines, beta=beta)
+
+
+def test_backends_agree_on_generated_population():
+    """The gen:* stress suites run through the same pinned tolerances --
+    the population that exists precisely to catch off-suite drift."""
+    from repro.core.model_zoo import resolve_suite
+
+    profiles = resolve_suite("gen:16:seed=9")
+    machines = candidate_machines(24, seed=6)
+    _assert_backends_agree(profiles, machines)
 
 
 # --------------------------------------------------------------------------- #

@@ -14,44 +14,9 @@ The load-bearing properties (the ISSUE acceptance gates):
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # pragma: no cover - exercised in minimal images
-    # Tier-1 must pass without the `dev` extra (pyproject declares hypothesis
-    # there, not in core deps).  Drive the same property-test bodies with a
-    # small deterministic sampler: both range endpoints plus seeded uniform
-    # draws for every @given float strategy (mirrors tests/test_congruence.py).
-    import random as _random
+from conftest import hypothesis_shim
 
-    class _Floats:
-        def __init__(self, lo, hi):
-            self.lo, self.hi = lo, hi
-
-    class st:  # noqa: N801 - mirrors the hypothesis module name
-        floats = _Floats
-
-    def settings(**_kw):
-        return lambda fn: fn
-
-    def given(**strategies):
-        def deco(fn):
-            def runner():
-                rng = _random.Random(0xBEEF)
-                for trial in range(32):
-                    kwargs = {}
-                    for name in sorted(strategies):
-                        s = strategies[name]
-                        if trial == 0:
-                            kwargs[name] = s.lo
-                        elif trial == 1:
-                            kwargs[name] = s.hi
-                        else:
-                            kwargs[name] = s.lo + (s.hi - s.lo) * rng.random()
-                    fn(**kwargs)
-            runner.__name__ = fn.__name__
-            runner.__doc__ = fn.__doc__
-            return runner
-        return deco
+given, settings, st = hypothesis_shim(seed=0xBEEF, trials=32)
 
 from repro.core import VARIANTS, WorkloadProfile
 from repro.core.codesign import theta_box

@@ -16,44 +16,10 @@ The load-bearing properties:
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # pragma: no cover - exercised in minimal images
-    # Tier-1 must pass without the `dev` extra (mirrors
-    # tests/test_constrained.py): drive the same property-test bodies with
-    # both range endpoints plus seeded uniform draws.  Fewer trials than
-    # the projection fallback -- each trial here is a full jax descent.
-    import random as _random
+from conftest import hypothesis_shim
 
-    class _Floats:
-        def __init__(self, lo, hi):
-            self.lo, self.hi = lo, hi
-
-    class st:  # noqa: N801 - mirrors the hypothesis module name
-        floats = _Floats
-
-    def settings(**_kw):
-        return lambda fn: fn
-
-    def given(**strategies):
-        def deco(fn):
-            def runner():
-                rng = _random.Random(0xF407)
-                for trial in range(6):
-                    kwargs = {}
-                    for name in sorted(strategies):
-                        s = strategies[name]
-                        if trial == 0:
-                            kwargs[name] = s.lo
-                        elif trial == 1:
-                            kwargs[name] = s.hi
-                        else:
-                            kwargs[name] = s.lo + (s.hi - s.lo) * rng.random()
-                    fn(**kwargs)
-            runner.__name__ = fn.__name__
-            runner.__doc__ = fn.__doc__
-            return runner
-        return deco
+# Few fallback trials -- each trial here is a full jax descent.
+given, settings, st = hypothesis_shim(seed=0xF407, trials=6)
 
 from repro.core import VARIANTS, frontier_codesign
 from repro.core.codesign import theta_box

@@ -1,0 +1,206 @@
+"""Generated-workload stress populations (core/genload.py).
+
+Property pins:
+  1. index-addressed sampling: ``sample_at(indices)`` is byte-identical
+     to slicing the materialized draw, in BOTH generation modes -- the
+     streamed == materialized property mega-sweeps rely on;
+  2. every generated profile is physically coherent (bytes follow from
+     FLOPs and intensity, collective split sums exactly, model FLOPs
+     below the global HLO count, power-of-two meshes);
+  3. congruence scores of generated populations are finite on every
+     kernel backend across the whole knob space;
+  4. the ``gen:<count>`` suite grammar parses/validates through the ONE
+     suite funnel (``model_zoo.validate_suite_name``/``resolve_suite``),
+     so gen suites are accepted by ``run_sweep``, the co-design entry
+     points, ``CodesignSpec`` and the CLIs without special cases.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import hypothesis_shim
+
+given, settings, st = hypothesis_shim(seed=0x9E7040, trials=16)
+
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.core.genload import (
+    APP_PARAMS,
+    AppSpace,
+    GEN_MODES,
+    is_gen_suite,
+    parse_gen_suite,
+    resolve_gen_suite,
+)
+from repro.core.model_zoo import resolve_suite, validate_suite_name
+from repro.core.spec import CodesignSpec
+from repro.core.sweep import Dim, ParamSpace, run_sweep
+
+# --------------------------------------------------------------------------- #
+# suite grammar (the gen:* arm of the ONE funnel)
+# --------------------------------------------------------------------------- #
+
+
+def test_gen_suite_grammar():
+    assert parse_gen_suite("gen:64") == (64, 0, "halton")
+    assert parse_gen_suite("gen:8:seed=3") == (8, 3, "halton")
+    assert parse_gen_suite("gen:8:mode=rng") == (8, 0, "rng")
+    assert parse_gen_suite("gen:32:seed=7:mode=rng") == (32, 7, "rng")
+    for bad in ("gen", "gen:", "gen:x", "gen:0", "gen:-3",
+                "gen:8:seed=x", "gen:8:mode=bogus", "gen:8:foo=1",
+                "gen:8:seed"):
+        with pytest.raises(ValueError):
+            parse_gen_suite(bad)
+
+
+def test_is_gen_suite_dispatch():
+    assert is_gen_suite("gen:8")
+    assert is_gen_suite("gen")          # dispatches; parse then rejects
+    assert not is_gen_suite("zoo")
+    assert not is_gen_suite("zoo-smoke:train")
+    assert not is_gen_suite(None)
+    assert not is_gen_suite(["gen:8"])
+
+
+def test_suite_funnel_accepts_gen():
+    validate_suite_name("gen:8")                  # must not raise
+    validate_suite_name("gen:8:seed=1:mode=rng")
+    with pytest.raises(ValueError, match="count"):
+        validate_suite_name("gen")
+    with pytest.raises(ValueError, match="mode"):
+        validate_suite_name("gen:8:mode=bogus")
+    # zoo names still route to the zoo arm
+    with pytest.raises(ValueError):
+        validate_suite_name("zoo:bogus")
+    profiles = resolve_suite("gen:5")
+    assert [p.name for p in profiles] == [f"gen-{i:05d}" for i in range(5)]
+    assert all(p.arch == "genload" for p in profiles)
+
+
+def test_gen_suite_is_deterministic_in_the_string():
+    a = resolve_suite("gen:6:seed=2")
+    b = resolve_suite("gen:6:seed=2")
+    for pa, pb in zip(a, b):
+        assert pa.to_json() == pb.to_json()
+    c = resolve_suite("gen:6:seed=3")
+    assert any(pa.to_json() != pc.to_json() for pa, pc in zip(a, c))
+
+
+def test_codesign_spec_validates_gen_suite():
+    assert CodesignSpec(suite="gen:8").validate().suite == "gen:8"
+    with pytest.raises(ValueError, match="count"):
+        CodesignSpec(suite="gen").validate()
+    with pytest.raises(ValueError):
+        CodesignSpec(suite="gen:0").validate()
+
+
+# --------------------------------------------------------------------------- #
+# AppSpace construction + physical coherence
+# --------------------------------------------------------------------------- #
+
+
+def test_app_space_validates_knobs():
+    with pytest.raises(KeyError, match="missing"):
+        AppSpace(dims={"flops": Dim(1e12, 1e15)})
+    dims = dict(AppSpace.default().dims)
+    dims["bogus_knob"] = Dim(0.0, 1.0, log=False)
+    with pytest.raises(KeyError, match="unknown workload knob"):
+        AppSpace(dims=dims)
+    assert sorted(AppSpace.default().dims) == sorted(APP_PARAMS)
+
+
+@pytest.mark.parametrize("mode", GEN_MODES)
+def test_generated_profiles_are_physically_coherent(mode):
+    space = AppSpace.default()
+    for p in space.profiles_at(range(64), seed=4, mode=mode):
+        lo, hi = space.dims["flops"].lo, space.dims["flops"].hi
+        assert lo <= p.flops <= hi
+        assert p.hbm_bytes == p.bytes_accessed > 0.0
+        intensity = p.flops / p.hbm_bytes
+        assert 8.0 * (1 - 1e-12) <= intensity <= 2048.0 * (1 + 1e-12)
+        coll = sum(p.collective_bytes.values())
+        assert 0.0 <= coll <= 0.5 * p.hbm_bytes * (1 + 1e-12)
+        assert all(v >= 0.0 for v in p.collective_bytes.values())
+        assert 0.0 <= p.pod_collective_bytes <= coll * (1 + 1e-12)
+        # power-of-two mesh inside the declared range
+        assert p.num_devices & (p.num_devices - 1) == 0
+        assert 8 <= p.num_devices <= 4096
+        # analytic model FLOPs never exceed the global HLO count
+        assert 0.0 < p.model_flops < p.flops * p.num_devices
+        assert p.step_kind == "train"
+
+
+# --------------------------------------------------------------------------- #
+# streamed == materialized (index-addressed sampling)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("mode", GEN_MODES)
+def test_sample_at_equals_slicing(mode):
+    space = AppSpace.default()
+    full = space.sample(32, seed=5, mode=mode)
+    # contiguous shard, scattered indices, and a single row
+    for idx in ([7, 8, 9, 10], [0, 31, 3, 17], [13]):
+        shard = space.sample_at(idx, seed=5, mode=mode)
+        assert shard.names == [full.names[i] for i in idx]
+        for field in ("flops", "mem_bytes", "num_devices", "model_flops",
+                      "pod_collective_bytes"):
+            np.testing.assert_array_equal(getattr(shard, field),
+                                          getattr(full, field)[idx])
+    # profiles_at round-trips through WorkloadProfile identically
+    again = space.profiles_at([13], seed=5, mode=mode)[0]
+    assert again.to_json() == space.profiles_at(
+        range(32), seed=5, mode=mode)[13].to_json()
+
+
+def test_modes_and_seeds_decorrelate():
+    space = AppSpace.default()
+    h = space.sample(16, seed=0, mode="halton")
+    r = space.sample(16, seed=0, mode="rng")
+    assert not np.array_equal(h.flops, r.flops)
+    h2 = space.sample(16, seed=1, mode="halton")
+    assert not np.array_equal(h.flops, h2.flops)
+
+
+# --------------------------------------------------------------------------- #
+# scores finite on every backend, across the knob space
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+def test_gen_suite_scores_finite_every_backend(backend):
+    res = run_sweep("gen:12", n=8, seed=0, backend=backend)
+    assert res.aggregate.shape == (12, 8)
+    assert np.isfinite(res.aggregate).all()
+    assert np.isfinite(res.beta).all() and (res.beta > 0).all()
+
+
+@given(seed_f=st.floats(0.0, 1e6))
+@settings(max_examples=16, deadline=None)
+def test_gen_population_always_scores_finite(seed_f):
+    """Any seed's population scores finite -- no knob corner (zero
+    collectives, max intensity, tiny mesh) can produce NaN/inf."""
+    res = run_sweep(f"gen:6:seed={int(seed_f)}", n=4, include_named=())
+    assert np.isfinite(res.aggregate).all()
+    assert np.isfinite(DEFAULT_COST_MODEL.area(res.machines)).all()
+
+
+# --------------------------------------------------------------------------- #
+# ParamSpace.scale_space preset (machine-side satellite)
+# --------------------------------------------------------------------------- #
+
+
+def test_scale_space_preset():
+    from repro.core.sweep import SWEEP_PARAMS
+
+    space = ParamSpace.scale_space(scale_span=2.0)
+    assert sorted(space.dims) == sorted(SWEEP_PARAMS)
+    assert sorted(ParamSpace.default().dims) == sorted(
+        set(SWEEP_PARAMS) - {"scale_compute", "scale_memory",
+                             "scale_interconnect"})
+    for knob in ("scale_compute", "scale_memory", "scale_interconnect"):
+        assert space.dims[knob].lo == pytest.approx(0.5)
+        assert space.dims[knob].hi == pytest.approx(2.0)
+    pop = space.sample(8, seed=0)
+    assert len(pop) == 8
+    res = run_sweep("gen:4", space=space, n=8, include_named=())
+    assert np.isfinite(res.aggregate).all()

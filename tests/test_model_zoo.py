@@ -41,42 +41,7 @@ from repro.launch import xla_flags
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
-
-
-def floats_property(n_examples=150, **ranges):
-    """``@given`` with float ranges, or a seeded-loop fallback.
-
-    ``ranges`` maps argument names to ``(lo, hi)`` bounds.  With hypothesis
-    installed the test becomes a ``@given`` property; without it the same
-    predicate runs over ``n_examples`` deterministic uniform draws.
-    """
-
-    def deco(fn):
-        if HAVE_HYPOTHESIS:
-            strats = {k: st.floats(min_value=lo, max_value=hi,
-                                   allow_nan=False, allow_infinity=False)
-                      for k, (lo, hi) in ranges.items()}
-            return settings(max_examples=n_examples,
-                            deadline=None)(given(**strats)(fn))
-
-        def runner():
-            rng = np.random.default_rng(20260808)
-            for _ in range(n_examples):
-                fn(**{k: float(rng.uniform(lo, hi))
-                      for k, (lo, hi) in ranges.items()})
-
-        runner.__name__ = fn.__name__
-        runner.__doc__ = fn.__doc__
-        return runner
-
-    return deco
+from conftest import floats_property
 
 
 # --------------------------------------------------------------------------- #
@@ -368,7 +333,7 @@ def test_sweep_cli_suite_smoke():
         capture_output=True, text=True, timeout=600, cwd=ROOT,
         env={**os.environ, "PYTHONPATH": SRC + os.pathsep + ROOT})
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    assert "zoo profiles" in out.stderr
+    assert "suite zoo-smoke:" in out.stderr and "profiles" in out.stderr
     assert "| variant |" in out.stdout
     # bad suite names die at argparse time
     bad = subprocess.run(

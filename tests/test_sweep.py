@@ -381,14 +381,10 @@ def test_sweep_result_reports():
 
 
 def scale_space(span=4.0):
-    """The ROADMAP's plumbed-but-unused degradation sweep: rate dims plus
-    the per-subsystem delay scale_* dims UNpinned."""
-    space = ParamSpace.default(span=span)
-    dims = dict(space.dims)
-    dims["scale_compute"] = Dim(0.25, 4.0)
-    dims["scale_memory"] = Dim(0.25, 4.0)
-    dims["scale_interconnect"] = Dim(0.25, 4.0)
-    return ParamSpace(dims=dims, nominal=space.nominal)
+    """Degradation sweep: rate dims plus the per-subsystem delay scale_*
+    dims UNpinned -- now the ``ParamSpace.scale_space`` preset (pinned
+    further in tests/test_genload.py)."""
+    return ParamSpace.scale_space(span=span, scale_span=4.0)
 
 
 def test_scale_dims_sample_and_vary():
