@@ -18,6 +18,14 @@ Public API:
   constrained.joint_codesign               -- joint machine+sharding descent
   frontier.frontier_codesign               -- J*(budget) feasibility frontier
                                               by warm-started continuation
+  implicit.implicit_sensitivities          -- KKT shadow prices and
+                                              dJ*/d(budget) at an optimum
+                                              via the implicit function
+                                              theorem (plus sensitivities_of
+                                              for CodesignResults)
+  implicit.bilevel_codesign                -- outer budget-split descent
+                                              through the inner optimum
+                                              (implicit custom-VJP gradient)
   genload.AppSpace                         -- generated-workload stress
                                               populations ("gen:<n>" suites,
                                               index-addressed sampling)
@@ -47,6 +55,15 @@ from repro.core.constrained import (
     validate_area_envelope,
 )
 from repro.core.frontier import FrontierResult, frontier_codesign
+from repro.core.implicit import (
+    BilevelResult,
+    SensitivityReport,
+    bilevel_codesign,
+    implicit_jstar_fn,
+    implicit_sensitivities,
+    sensitivities_of,
+    unrolled_jstar_fn,
+)
 from repro.core.genload import (
     APP_PARAMS,
     AppSpace,

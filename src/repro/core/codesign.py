@@ -234,6 +234,12 @@ class CodesignResult:
     feasible: Optional[np.ndarray] = None        # (V,) bool, None = no budget
     violation_trace: Optional[np.ndarray] = None  # (T, V) relative violation
     selection_names: Optional[List[List[str]]] = None  # joint: (V,)(G,) picks
+    #: Augmented-Lagrangian shadow-price estimates (PR 10): ``(V, C)``
+    #: multipliers against the ABSOLUTE budgets, one column per
+    #: ``constraint_names`` entry (cross-checkable against the implicit
+    #: sensitivities in ``repro.core.implicit``).  Lagrangian mode only.
+    multipliers: Optional[np.ndarray] = None
+    constraint_names: Optional[Tuple[str, ...]] = None
 
     @property
     def improvement(self) -> np.ndarray:
@@ -295,6 +301,10 @@ class CodesignResult:
         if self.violation_trace is not None and len(self.violation_trace):
             rep["max_violation"] = float(np.max(self.violation_trace))
             rep["final_violation"] = float(np.max(self.violation_trace[-1]))
+        if self.multipliers is not None:
+            rep["shadow_prices"] = {
+                c: [float(x) for x in self.multipliers[:, j]]
+                for j, c in enumerate(self.constraint_names)}
         return rep
 
     def _variant_order(self, top_k: Optional[int]) -> List[int]:

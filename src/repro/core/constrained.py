@@ -179,6 +179,27 @@ def budget_violations_vector(xp, m: K.MachineArrays, cost_model: CostModel,
     return xp.maximum(xp.stack(cols, axis=1), 0.0)
 
 
+def constraint_labels(area_budget, power_budget,
+                      area_envelope: Optional[Mapping[str, float]] = None
+                      ) -> List[str]:
+    """Constraint-column names in ``budget_violations_vector`` order
+    (scalar area, scalar power, then envelope fields sorted by name) --
+    the shared key between the augmented-Lagrangian multipliers and the
+    implicit shadow prices in ``repro.core.implicit``.
+
+    >>> constraint_labels(1.0, None, {"hbm_bw": 0.5, "peak_flops": 2.0})
+    ['area', 'hbm_bw', 'peak_flops']
+    """
+    labels = []
+    if area_budget is not None:
+        labels.append("area")
+    if power_budget is not None:
+        labels.append("power")
+    if area_envelope:
+        labels.extend(sorted(area_envelope))
+    return labels
+
+
 def budget_violation(xp, m: K.MachineArrays, cost_model: CostModel,
                      area_budget: Optional[float],
                      power_budget: Optional[float],
@@ -495,7 +516,8 @@ def _validate_budgets(area_budget, power_budget, area_envelope=None):
 def _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
               cost_model, mode, suffix, area_budget, power_budget,
               violation_trace, feasible, objective_final,
-              selection_names=None, area_envelope=None) -> CodesignResult:
+              selection_names=None, area_envelope=None, multipliers=None,
+              constraint_names=None) -> CodesignResult:
     final_m = machine_arrays_from_theta(np, theta_np, fixed_np)
     return CodesignResult(
         names=list(mb.names),
@@ -520,6 +542,8 @@ def _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area, w_power,
         violation_trace=(np.stack(violation_trace, axis=0)
                          if violation_trace is not None else None),
         selection_names=selection_names,
+        multipliers=multipliers,
+        constraint_names=constraint_names,
     )
 
 
@@ -725,14 +749,28 @@ def constrained_codesign(
                                         method=projection)
             return out
 
+        multipliers = constraint_names = None
         if mode == "projected":
             theta, f_cur, history, vtrace, _ = backtracking_descent(
                 jax, jnp, backend.asarray(theta0), objective, steps, lr,
                 retract=project, aux_fn=violation)
         else:
-            theta, history, vtrace = _lagrangian_descent(
+            theta, history, vtrace, lam_rel = _lagrangian_descent(
                 jax, jnp, backend, theta0, lo_j, hi_j, objective, violation,
                 violations_vec, steps, lr, outer_iters, mu0, mu_growth)
+            # The dual iterates multiply RELATIVE violations
+            # (value / budget - 1); report them as ABSOLUTE shadow prices
+            # (lam_abs = lam_rel / budget) so they are directly comparable
+            # to the implicit-function-theorem sensitivities
+            # d J*/d budget = -lambda from repro.core.implicit.
+            labels = constraint_labels(area_budget, power_budget,
+                                       area_envelope)
+            scale = np.array(
+                [area_budget if c == "area" else
+                 power_budget if c == "power" else area_envelope[c]
+                 for c in labels])
+            multipliers = np.asarray(lam_rel) / scale[None, :]
+            constraint_names = tuple(labels)
             # Safety net: the dual iterates approach feasibility from
             # outside; project the final design so the returned machines
             # honour the budget to FEASIBLE_RTOL exactly like projected
@@ -766,7 +804,8 @@ def constrained_codesign(
     return _finalize(mb, fixed_np, theta0, theta_np, history, steps, w_area,
                      w_power, cost_model, mode, suffix, area_budget,
                      power_budget, vtrace, feasible, f_final,
-                     area_envelope=area_envelope)
+                     area_envelope=area_envelope, multipliers=multipliers,
+                     constraint_names=constraint_names)
 
 
 def _lagrangian_descent(jax, jnp, backend, theta0, lo_j, hi_j, objective,
@@ -818,7 +857,7 @@ def _lagrangian_descent(jax, jnp, backend, theta0, lo_j, hi_j, objective,
         mu = jnp.where(ok, mu * mu_growth, mu * (mu_growth ** 2))
         history.append(np.asarray(objective(theta)))
         vtrace.append(np.asarray(v_best))
-    return theta, history, vtrace
+    return theta, history, vtrace, np.asarray(lam)
 
 
 # --------------------------------------------------------------------------- #

@@ -47,7 +47,7 @@ frontier traces via the ``seed_codesign`` warm starts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -61,6 +61,7 @@ from repro.core.codesign import (
     resolve_beta,
     theta_box,
 )
+from repro.core.codesign import OPT_FIELDS
 from repro.core.constrained import (
     FEASIBLE_RTOL,
     budget_feasible,
@@ -143,9 +144,30 @@ class FrontierResult:
     # frontier cache).
     continuation: Optional[Dict[float, np.ndarray]] = None
     final_lr: Optional[np.ndarray] = None    # (V,) per-variant backtracking lr
+    # Implicit sensitivities (PR 10), attached by ``frontier_codesign``
+    # unless ``sensitivities=False``: per-budget ``dJ*/d(area budget)``
+    # (zero on propagated flat segments -- the area constraint is slack
+    # there), the full per-constraint shadow prices, and the constraint
+    # column names.  NaN rows are infeasible floor points.
+    dJ_dbudget: Optional[np.ndarray] = None          # (N,)
+    shadow_prices: Optional[np.ndarray] = None       # (N, C)
+    sensitivity_constraints: Optional[Tuple[str, ...]] = None
 
     def __len__(self) -> int:
         return len(self.budgets)
+
+    def _sensitivity_blob(self, i: int) -> dict:
+        """Per-point sensitivity keys for ``to_json`` ({} when absent or
+        the row is an infeasible floor point)."""
+        if (self.dJ_dbudget is None
+                or not np.isfinite(self.dJ_dbudget[i])):
+            return {}
+        return {
+            "dJ_dbudget": float(self.dJ_dbudget[i]),
+            "shadow_prices": {
+                c: float(self.shadow_prices[i, j])
+                for j, c in enumerate(self.sensitivity_constraints)},
+        }
 
     def _rows(self, top_k: Optional[int]) -> List[int]:
         """Budget rows to report: all, or the ``top_k`` best-objective
@@ -221,16 +243,27 @@ class FrontierResult:
             f"({self.steps} + {self.refine_steps}/budget steps)",
             "",
             "| area budget | J*(budget) | best seed | area | power "
-            "| feasible | knee |",
-            "|---" * 7 + "|",
+            "| feasible | knee |"
+            + (" dJ*/db | shadow price |"
+               if self.dJ_dbudget is not None else ""),
+            "|---" * (9 if self.dJ_dbudget is not None else 7) + "|",
         ]
         for i in self._rows(top_k):
-            lines.append(
+            row = (
                 f"| {self.budgets[i]:.4g} | {self.objective[i]:.4f} "
                 f"| {self.best_names[i]} | {self.area[i]:.3f} "
                 f"| {self.power[i]:.3f} "
                 f"| {'yes' if self.feasible[i] else 'NO'} "
                 f"| {'*' if knee is not None and self.budgets[i] == knee else ''} |")
+            if self.dJ_dbudget is not None:
+                dj = float(self.dJ_dbudget[i])
+                row += (f" {dj:.4f} | {-dj:.4f} |"
+                        if np.isfinite(dj) else " - | - |")
+            lines.append(row)
+        if self.dJ_dbudget is not None:
+            lines += ["", "shadow price = -dJ*/d(area budget): the "
+                          "first-order J* gain per unit of extra area "
+                          "budget (0 on flat, slack segments)."]
         if self.area_envelope:
             lines += ["", f"per-subsystem envelopes: {self.area_envelope}"]
         if self.power_budget is not None:
@@ -252,9 +285,13 @@ class FrontierResult:
                  "area": float(self.area[i]),
                  "power": float(self.power[i]),
                  "feasible": bool(self.feasible[i]),
-                 "params": self.best_params[i]}
+                 "params": self.best_params[i],
+                 **self._sensitivity_blob(i)}
                 for i in self._rows(top_k)],
         }
+        if self.sensitivity_constraints is not None:
+            out["sensitivity_constraints"] = list(
+                self.sensitivity_constraints)
         if bool(np.any(self.feasible)):
             out["knee"] = self.knee()
         if self.power_budget is not None:
@@ -295,6 +332,7 @@ def frontier_codesign(
     warm_theta: Optional[np.ndarray] = None,
     warm_lr=None,                      # scalar or (V,) per-variant lr
     keep_state: bool = False,
+    sensitivities: bool = True,
     spec=None,
 ) -> FrontierResult:
     """Trace J*(budget) over a schedule of area budgets by continuation.
@@ -425,6 +463,7 @@ def frontier_codesign(
     feasible_arr = np.zeros(n, dtype=bool)
     best_names: List[str] = [""] * n
     best_params: List[Dict[str, float]] = [{}] * n
+    seed_idx = np.zeros(n, dtype=int)
     per_seed = np.stack([raw_obj[b] for b in asc], axis=0)
     carry = None
     for i, b in enumerate(asc):
@@ -438,6 +477,7 @@ def frontier_codesign(
             "obj": float(f_i[k]),
             "params": params_of_theta(th_i[k], fixed_np, k),
             "name": mb.names[k],
+            "seed": k,
             "feasible": bool(feas_i[k]),
             "area": float(np.asarray(cost_model.area(m_i))[k]),
             "power": float(np.asarray(cost_model.power(m_i))[k]),
@@ -450,9 +490,35 @@ def frontier_codesign(
         objective_arr[i] = cand["obj"]
         best_names[i] = cand["name"]
         best_params[i] = cand["params"]
+        seed_idx[i] = cand["seed"]
         feasible_arr[i] = cand["feasible"]
         area_arr[i] = cand["area"]
         power_arr[i] = cand["power"]
+
+    # First-order implicit sensitivities at each frontier point: the
+    # budget rows act as "variants" (per-row fixed arrays + per-row area
+    # budget), one KKT solve on the converged designs -- see
+    # repro.core.implicit.  Propagated rows have a slack area constraint,
+    # so their shadow price is 0, matching the flat frontier segment.
+    dj_db = prices = constraint_names = None
+    if sensitivities and bool(feasible_arr.any()):
+        from repro.core.implicit import _first_order_report
+
+        row_fixed = K.MachineArrays(**{
+            f: np.array([p[f] for p in best_params], dtype=np.float64)
+            for f in K.MachineArrays._fields})
+        theta_rows = np.log(np.stack(
+            [[p[f] for f in OPT_FIELDS] for p in best_params]))
+        rep = _first_order_report(
+            pb, best_names, row_fixed, theta_rows, lo[seed_idx],
+            hi[seed_idx], area_budget=np.asarray(asc),
+            power_budget=power_budget, area_envelope=area_envelope,
+            cost_model=cost_model, beta_np=beta_np,
+            timing_model=timing_model, eps=eps, w_area=w_area,
+            w_power=w_power)
+        prices = np.where(feasible_arr[:, None], rep.multipliers, np.nan)
+        dj_db = -prices[:, 0]            # area is always column 0 here
+        constraint_names = rep.constraint_names
 
     return FrontierResult(
         budgets=np.asarray(asc),
@@ -471,4 +537,7 @@ def frontier_codesign(
         area_envelope=area_envelope,
         continuation=dict(raw) if keep_state else None,
         final_lr=np.asarray(lr_v) if keep_state else None,
+        dJ_dbudget=dj_db,
+        shadow_prices=prices,
+        sensitivity_constraints=constraint_names,
     )

@@ -90,6 +90,11 @@ class CodesignSpec:
     seed: Optional[int] = None
     # ---- multi-tenant packing ------------------------------------------
     num_machines: Optional[int] = None          # pack_codesign fleet size
+    # ---- bilevel budget descent (implicit.py) ---------------------------
+    total_budget: Optional[float] = None        # split across area + power
+    split0: Optional[float] = None              # initial area share, (0, 1)
+    outer_steps: Optional[int] = None           # outer descent iterations
+    outer_lr: Optional[float] = None            # outer step size on the split
     # ---- workload suite -------------------------------------------------
     suite: Optional[str] = None      # zoo[-smoke][:scenario] | gen:<count>
 
@@ -128,10 +133,18 @@ class CodesignSpec:
         if self.sweep_mode is not None and self.sweep_mode not in SWEEP_MODES:
             raise ValueError(f"unknown sweep_mode {self.sweep_mode!r}; "
                              f"have {SWEEP_MODES}")
-        for name in ("steps", "refine_steps", "n", "num_machines"):
+        for name in ("steps", "refine_steps", "n", "num_machines",
+                     "outer_steps"):
             value = getattr(self, name)
             if value is not None and not int(value) > 0:
                 raise ValueError(f"{name} must be positive, got {value!r}")
+        for name in ("total_budget", "outer_lr"):
+            value = getattr(self, name)
+            if value is not None and not value > 0.0:
+                raise ValueError(f"{name} must be positive, got {value!r}")
+        if self.split0 is not None and not 0.0 < self.split0 < 1.0:
+            raise ValueError("split0 must lie strictly inside (0, 1), "
+                             f"got {self.split0!r}")
         return dataclasses.replace(self, area_envelope=envelope,
                                    budgets=budgets)
 

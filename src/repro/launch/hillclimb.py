@@ -187,7 +187,8 @@ def codesign_sweep(profile, n: int, seed: int = 0,
 def codesign_grad(profile, steps: int, lr: float = 0.1,
                   area_budget: float = None, power_budget: float = None,
                   constraint_mode: str = "projected",
-                  opt_links: bool = False, area_envelope: dict = None) -> dict:
+                  opt_links: bool = False, area_envelope: dict = None,
+                  sensitivities: bool = False) -> dict:
     """Gradient co-design: descend the scalarized (congruence, area, power)
     objective from the named-variant seeds by jax.grad through the shared
     kernels (``repro.core.codesign``); the optimized continuous designs
@@ -208,7 +209,29 @@ def codesign_grad(profile, steps: int, lr: float = 0.1,
             [profile], seeds, steps=steps, lr=lr, area_budget=area_budget,
             power_budget=power_budget, area_envelope=area_envelope,
             mode=constraint_mode, optimize_links=opt_links)
-    return res.to_json()
+    out = res.to_json()
+    if sensitivities and (area_budget is not None
+                          or power_budget is not None or area_envelope):
+        # KKT shadow prices at the optimum (repro.core.implicit): which
+        # budget is worth relaxing, and by how much per unit of budget.
+        from repro.core.implicit import sensitivities_of
+        rep = sensitivities_of(res, [profile])
+        out["sensitivities"] = rep.to_json()
+    return out
+
+
+def codesign_bilevel(profile, total_budget: float, steps: int,
+                     lr: float = 0.1, area_envelope: dict = None):
+    """Bilevel budget descent (``repro.core.implicit``): outer descent on
+    the area/power split of one total silicon budget, differentiated
+    through the inner constrained optimum by the implicit custom-VJP."""
+    from repro.core.implicit import bilevel_codesign
+    from repro.core.sweep import MachineBatch
+
+    return bilevel_codesign(
+        [profile], MachineBatch.from_models(M.VARIANTS),
+        total_budget=total_budget, steps=steps, lr=lr,
+        area_envelope=area_envelope)
 
 
 def codesign_frontier(profile, budgets, steps: int, lr: float = 0.1,
@@ -363,6 +386,32 @@ def validate_codesign_args(parser, args) -> None:
     if args.joint and envelope is not None:
         parser.error("--joint does not support --area-envelope; use scalar "
                      "--area-budget/--power-budget")
+    bilevel = getattr(args, "bilevel", None)
+    if bilevel is not None:
+        if not bilevel > 0.0:
+            parser.error(f"--bilevel must be positive, got {bilevel}")
+        if not args.grad:
+            parser.error("--bilevel requires --grad STEPS (inner solves)")
+        if args.area_budget is not None or args.power_budget is not None:
+            parser.error("--bilevel derives the area/power budgets from "
+                         "the learned split; drop --area-budget/"
+                         "--power-budget")
+        if args.joint or args.opt_links or args.constraint_mode \
+                or budget_sweep is not None or pack:
+            parser.error("--bilevel is its own co-design mode; drop "
+                         "--joint/--opt-links/--constraint-mode/"
+                         "--budget-sweep/--pack")
+    if getattr(args, "sensitivities", False):
+        if not args.grad:
+            parser.error("--sensitivities requires --grad STEPS")
+        if args.joint:
+            parser.error("--sensitivities does not support --joint "
+                         "(per-variant selection has no single optimum "
+                         "to differentiate through)")
+        if not has_budget and budget_sweep is None and bilevel is None:
+            parser.error("--sensitivities needs a constraint to price; "
+                         "add --area-budget/--power-budget/"
+                         "--area-envelope")
 
 
 def main(argv=None) -> int:
@@ -419,6 +468,17 @@ def main(argv=None) -> int:
                     help="per-subsystem area envelopes for --grad / "
                          "--budget-sweep, e.g. peak_flops=1.5,hbm_bw=0.8 "
                          "(keys from repro.core.costmodel.RATE_FIELDS)")
+    ap.add_argument("--sensitivities", action="store_true",
+                    help="after a budgeted --grad run, report KKT shadow "
+                         "prices and dJ*/d(budget) at the optimum "
+                         "(repro.core.implicit); with --budget-sweep the "
+                         "frontier rows carry them automatically")
+    ap.add_argument("--bilevel", type=float, default=None, metavar="T",
+                    help="bilevel budget descent: split one total silicon "
+                         "budget T between area and power by outer "
+                         "descent through the inner constrained optimum "
+                         "(implicit custom-VJP gradient; requires --grad "
+                         "STEPS for the inner solves)")
     ap.add_argument("--pack", type=int, default=0, metavar="M",
                     help="multi-tenant packing: place the optimized "
                          "profile plus --pack-gen generated co-tenants "
@@ -503,7 +563,20 @@ def main(argv=None) -> int:
               f"pareto={len(cd['pareto'])} points")
 
     if args.grad > 0:
-        if args.joint:
+        if args.bilevel is not None:
+            # Bilevel co-design: how should one silicon budget be SPLIT
+            # between area and power?  Outer descent through the inner
+            # optimum via the implicit-function-theorem gradient.
+            bl = codesign_bilevel(profile, args.bilevel, args.grad,
+                                  lr=args.grad_lr, area_envelope=envelope)
+            profile.meta["bilevel_codesign"] = bl.to_json()
+            print(f"bilevel codesign (total={args.bilevel:.4g}, "
+                  f"{bl.outer_steps} outer steps): split "
+                  f"{bl.split_trajectory[0]:.3f} -> {bl.split_final:.3f}, "
+                  f"J* {bl.objective_trajectory[0]:.4f} -> "
+                  f"{bl.objective_final:.4f} "
+                  f"(+{bl.improvement_over_uniform:.4f} vs uniform split)")
+        elif args.joint:
             # Joint co-design: which (machine, sharding) pair wins?  The
             # primary cell keeps its kernel substitution; the remaining
             # sharding variants enter as baseline compiles.
@@ -537,6 +610,12 @@ def main(argv=None) -> int:
                   f"J* {fr.objective[-1]:.4f} (loosest) .. "
                   f"{fr.objective[0]:.4f} (tightest), "
                   f"feasible {n_feas}/{len(fr)}, knee={knee}")
+            if args.sensitivities and fr.shadow_prices is not None:
+                pts = ", ".join(
+                    f"{b:.4g}->{p:.4f}"
+                    for b, p in zip(fr.budgets, fr.shadow_prices[:, 0])
+                    if np.isfinite(p))
+                print(f"area shadow prices (budget -> -dJ*/db): {pts}")
         else:
             # Continuous co-design: in which direction should the machine
             # move (optionally under an area/power budget)?
@@ -545,7 +624,8 @@ def main(argv=None) -> int:
                 area_budget=args.area_budget,
                 power_budget=args.power_budget,
                 constraint_mode=args.constraint_mode or "projected",
-                opt_links=args.opt_links, area_envelope=envelope)
+                opt_links=args.opt_links, area_envelope=envelope,
+                sensitivities=args.sensitivities)
             profile.meta["grad_codesign"] = gd
             lines = ", ".join(
                 f"{v['name']}: {v['objective_seed']:.4f}->"
@@ -558,6 +638,17 @@ def main(argv=None) -> int:
                       f"area_budget={feas['area_budget']} "
                       f"power_budget={feas['power_budget']} "
                       f"all_feasible={feas['all_feasible']}")
+            if "sensitivities" in gd:
+                sens = gd["sensitivities"]
+                lines = "; ".join(
+                    f"{v['name']}: " + ", ".join(
+                        f"{c}={v['shadow_prices'][c]:.4f}"
+                        for c in sens["constraints"])
+                    + (f" (relax {v['best_relaxation']} first)"
+                       if v["best_relaxation"] else "")
+                    for v in sens["variants"])
+                print(f"shadow prices (dJ*/d(budget), sign flipped): "
+                      f"{lines}")
 
     if args.pack > 0:
         # Multi-tenant packing: how should a shared fleet split its

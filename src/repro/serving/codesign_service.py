@@ -67,7 +67,8 @@ from repro.core.sweep import (
 )
 
 #: Request kinds and the library entry point each one fronts.
-KINDS = ("sweep", "mega_sweep", "constrained", "joint", "frontier", "pack")
+KINDS = ("sweep", "mega_sweep", "constrained", "joint", "frontier", "pack",
+         "bilevel")
 
 #: Job lifecycle states (terminal: done/error/cancelled/timeout/rejected).
 PENDING, RUNNING = "pending", "running"
@@ -496,6 +497,7 @@ class CodesignService:
                 "joint": self._run_joint,
                 "frontier": self._run_frontier,
                 "pack": self._run_pack,
+                "bilevel": self._run_bilevel,
             }[req.kind]
             result = runner(job)
         except BaseException as exc:      # noqa: BLE001 -- jobs never crash workers
@@ -691,6 +693,23 @@ class CodesignService:
         # uniform markdown/to_json protocol -- render_result needs no
         # isinstance knowledge of it.
         return pack_codesign(req.profiles, seeds, spec=spec)
+
+    def _run_bilevel(self, job: Job):
+        from repro.core.implicit import bilevel_codesign
+
+        req = job.request
+        seeds = self._seeds(req)
+        spec = req.spec
+        if spec.total_budget is None:
+            raise ValueError("kind='bilevel' needs spec.total_budget "
+                             "(the budget split across area and power)")
+        self._note_artifact(
+            "bilevel", (len(seeds),), "jax",
+            _sig(spec.total_budget, spec.split0, spec.outer_steps,
+                 spec.area_envelope, spec.projection))
+        # ``BilevelResult`` joins the response path purely through the
+        # uniform markdown/to_json protocol, like pack does.
+        return bilevel_codesign(req.profiles, seeds, spec=spec)
 
     def _run_frontier(self, job: Job):
         from repro.core.frontier import frontier_codesign

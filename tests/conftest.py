@@ -81,6 +81,50 @@ def hypothesis_shim(seed, trials):
     return given, settings, st
 
 
+def gradcheck(fn, x, grad, *, rtol=1e-3, atol=1e-8, h=1e-3,
+              log_space=False, n_dirs=None, seed=0):
+    """Central-finite-difference check of ``grad`` against ``fn`` at ``x``.
+
+    The one FD harness every gradient test shares (it used to be
+    hand-rolled per test): ``fn`` maps a 1-D numpy array to a scalar,
+    ``grad`` is the analytic gradient at ``x``.  Each coordinate is
+    perturbed by a scaled central step ``h * max(|x_j|, 1)`` -- or
+    multiplicatively (``x_j * (1 +/- h)``) with ``log_space=True``, the
+    right convention for the strictly-positive rate/budget parameters
+    this repo differentiates through.  With ``n_dirs`` set, only that
+    many seeded random coordinates are checked (for expensive ``fn``).
+
+    Asserts ``|fd - grad| <= atol + rtol * max(|fd|, |grad|)`` per
+    checked coordinate and returns the worst relative error.
+    """
+    x = np.asarray(x, dtype=np.float64).ravel()
+    grad = np.asarray(grad, dtype=np.float64).ravel()
+    assert grad.shape == x.shape, (grad.shape, x.shape)
+    coords = np.arange(x.size)
+    if n_dirs is not None and n_dirs < x.size:
+        coords = np.random.default_rng(seed).choice(
+            x.size, size=n_dirs, replace=False)
+    worst = 0.0
+    for j in coords:
+        if log_space:
+            assert x[j] > 0.0, f"log_space gradcheck needs x > 0, got {x[j]}"
+            hj = h * x[j]
+        else:
+            hj = h * max(abs(x[j]), 1.0)
+        xp, xm = x.copy(), x.copy()
+        xp[j] += hj
+        xm[j] -= hj
+        fd = (float(fn(xp)) - float(fn(xm))) / (2.0 * hj)
+        scale = max(abs(fd), abs(grad[j]))
+        err = abs(fd - grad[j])
+        assert err <= atol + rtol * scale, (
+            f"gradcheck failed at coordinate {j}: fd={fd:.8g} "
+            f"grad={grad[j]:.8g} err={err:.3g} > "
+            f"atol+rtol*scale={atol + rtol * scale:.3g}")
+        worst = max(worst, err / max(scale, 1e-30))
+    return worst
+
+
 def floats_property(n_examples=150, seed=20260808, **ranges):
     """``@given`` with float ranges, or a seeded-loop fallback.
 

@@ -82,6 +82,58 @@ def test_to_json_serializable(result):
     assert len(blob["variants"]) == len(VARIANTS)
 
 
+def test_objective_gradient_matches_finite_differences():
+    """The jax gradient every descent in this repo follows must match
+    central finite differences of the NumPy reference objective (shared
+    ``conftest.gradcheck`` harness -- the same one that pins the
+    implicit budget sensitivities in tests/test_implicit.py)."""
+    from conftest import gradcheck
+
+    from repro.core.codesign import (
+        _as_batches,
+        _objective_terms,
+        machine_arrays_from_theta,
+        resolve_beta,
+        theta_box,
+    )
+    from repro.core.costmodel import DEFAULT_COST_MODEL
+    from repro.core.kernels_xp import IDEAL_EPS, get_backend
+
+    profiles = synthetic_suite()
+    pb, mb = _as_batches(profiles, MachineBatch.from_models(VARIANTS))
+    fixed_np = mb.arrays()
+    beta_np = resolve_beta(pb, mb, None, 0)
+    theta0, _, _ = theta_box(mb, 16.0)
+    backend = get_backend("jax")
+    jax, jnp = backend._jax, backend._jnp
+
+    with backend._x64():
+        p_arrays = backend.profile_arrays(pb.arrays())
+        fixed = backend.machine_arrays(fixed_np)
+        beta_j = backend.asarray(beta_np)
+
+        def obj_jax(flat):
+            th = jnp.reshape(backend.asarray(flat), theta0.shape)
+            m = machine_arrays_from_theta(jnp, th, fixed)
+            return jnp.sum(_objective_terms(
+                jnp, p_arrays, m, beta_j, "serial", IDEAL_EPS,
+                DEFAULT_COST_MODEL, 0.1, 0.05))
+
+        grad = np.asarray(jax.grad(obj_jax)(
+            backend.asarray(theta0.ravel())))
+
+    def obj_np(flat):
+        th = flat.reshape(theta0.shape)
+        m = machine_arrays_from_theta(np, th, fixed_np)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return float(np.sum(_objective_terms(
+                np, pb.arrays(), m, beta_np, "serial", IDEAL_EPS,
+                DEFAULT_COST_MODEL, 0.1, 0.05)))
+
+    worst = gradcheck(obj_np, theta0.ravel(), grad, rtol=1e-4, h=1e-5)
+    assert worst <= 1e-4
+
+
 def test_grad_respects_cost_model_weights():
     """Cranking the area weight must pull the optimized designs smaller."""
     profiles = random_profiles(3, seed=51)

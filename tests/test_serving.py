@@ -182,6 +182,34 @@ def test_cached_frontier_equals_cold_frontier():
     assert svc.stats["memo_hits"] == 1
 
 
+def test_bilevel_kind_runs_through_the_funnel():
+    """kind="bilevel" rides the same spec funnel: resolves the outer
+    budget-split descent, memoizes repeats, renders via the uniform
+    result protocol, and rejects a spec with no total_budget."""
+    svc = CodesignService(auto_start=False)
+    spec = CodesignSpec(total_budget=0.8, outer_steps=2, steps=8, lr=0.1)
+    req = lambda: CodesignRequest(kind="bilevel", profiles=suite("bi", 1),
+                                  spec=spec)
+    j1 = svc.submit(req())
+    svc.drain()
+    res = svc.result(j1, timeout=5)
+    assert res.total_budget == 0.8
+    assert res.improvement_over_uniform >= 0.0
+    assert abs(res.area_budget + res.power_budget - 0.8) < 1e-12
+    json.dumps(res.to_json(top_k=1))
+    assert "split" in res.markdown()
+    assert "split" in render_result(res, "markdown", top_k=1)
+    j2 = svc.submit(req())
+    svc.drain()
+    assert svc.result(j2, timeout=5) is res  # memo hit
+    j3 = svc.submit(CodesignRequest(kind="bilevel",
+                                    profiles=suite("bi", 1),
+                                    spec=CodesignSpec(steps=2)))
+    svc.drain()
+    with pytest.raises(ValueError, match="total_budget"):
+        svc.result(j3, timeout=5)
+
+
 def test_frontier_warm_start_from_cached_continuation():
     """A NEW schedule over the same suite/seeds resumes from the nearest
     already-solved budget (cheaper: refine_steps instead of steps)."""
